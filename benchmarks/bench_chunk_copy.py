@@ -1,0 +1,59 @@
+"""Paper Fig. 4: time to move a fixed payload through the enclave as a
+function of chunk size, one-way (in) and round-trip (in/out).
+
+Paper finding: overhead amortizes at chunks >= 64 KB; in/out costs at most
++20% over in.  TPU analogue: the payload crosses the enclave kernel in
+chunks of ``chunk_bytes``; small chunks pay per-launch (call-gate) costs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.kernels.enclave_map import ops as eops
+
+PAYLOAD_MB = 4  # scaled from the paper's 100 MB for 1-CPU-core CI
+
+
+def run(quick: bool = False):
+    rows: list = []
+    rng = np.random.default_rng(0)
+    k1 = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+    k2 = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+    nonce = jnp.asarray(rng.integers(0, 2 ** 32, 3, dtype=np.uint32))
+    payload_mb = 4 if quick else PAYLOAD_MB
+    total_blocks = payload_mb * (1 << 20) // 64
+    data = jnp.asarray(rng.integers(0, 2 ** 32, (total_blocks, 16),
+                                    dtype=np.uint32))
+
+    sizes_kb = [16, 64, 256] if quick else [16, 64, 256, 1024]
+    for kb in sizes_kb:
+        rows_per_chunk = max(kb * 1024 // 64, 1)
+        n_chunks = max(total_blocks // rows_per_chunk, 1)
+
+        def push(round_trip: bool):
+            outs = []
+            for c in range(n_chunks):
+                blk = jax.lax.dynamic_slice(
+                    data, (c * rows_per_chunk, 0), (rows_per_chunk, 16))
+                out = eops.enclave_map(k1, k2, nonce, 1 + c * rows_per_chunk,
+                                       blk, op="identity",
+                                       block_rows=min(rows_per_chunk, 512))
+                if round_trip:
+                    out = eops.enclave_map(k2, k1, nonce,
+                                           1 + c * rows_per_chunk, out,
+                                           op="identity",
+                                           block_rows=min(rows_per_chunk, 512))
+                outs.append(out)
+            return outs[-1]
+
+        t_in = time_fn(lambda: push(False), warmup=1, iters=3)
+        t_inout = time_fn(lambda: push(True), warmup=1, iters=3)
+        mbps_in = payload_mb / (t_in / 1e6)
+        rows.append((f"chunk_copy.in.{kb}KB", t_in,
+                     f"{mbps_in:.1f}MB/s"))
+        rows.append((f"chunk_copy.inout.{kb}KB", t_inout,
+                     f"overhead={(t_inout / t_in - 1) * 100:.0f}%"))
+    return rows

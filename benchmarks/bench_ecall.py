@@ -1,0 +1,41 @@
+"""µbench 1 (paper §5.3 first experiment): cost of a call into the enclave.
+
+Paper: native function call 23.6 ns vs ~2.35 µs ecall (~100x).  TPU
+analogue: a plain jit dispatch (native) vs the enclave kernel dispatch
+(decrypt+op+encrypt fused pallas call) on a minimal chunk — the "call gate"
+is the kernel launch + keystream derivation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.crypto import chacha20
+from repro.kernels.enclave_map import ops as eops
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    key1 = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+    key2 = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+    nonce = jnp.asarray(rng.integers(0, 2 ** 32, 3, dtype=np.uint32))
+    blocks = jnp.asarray(rng.integers(0, 2 ** 32, (256, 16), dtype=np.uint32))
+
+    plain = jax.jit(lambda x: x ^ np.uint32(1))
+    t_native = time_fn(lambda: plain(blocks), iters=20)
+    rows.append(("ecall.native_jit_call", t_native, "baseline"))
+
+    t_enclave = time_fn(lambda: eops.enclave_map(
+        key1, key2, nonce, 1, blocks, op="identity", block_rows=256),
+        iters=10)
+    rows.append(("ecall.enclave_kernel_call", t_enclave,
+                 f"ratio={t_enclave / max(t_native, 1e-9):.1f}x"))
+
+    t_cipher = time_fn(lambda: chacha20.encrypt_words(
+        key1, nonce, blocks.reshape(-1)), iters=10)
+    rows.append(("ecall.cipher_only_call", t_cipher,
+                 f"ratio={t_cipher / max(t_native, 1e-9):.1f}x"))
+    return rows

@@ -1,0 +1,53 @@
+"""Kernel throughput sweeps (beyond-paper): cipher, MAC, flash attention.
+Interpret-mode numbers are CPU correctness-path timings; the derived column
+reports bytes/FLOPs processed so TPU projections can be made from them."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.kernels.chacha20 import ops as cops
+from repro.kernels.cwmac import ops as mops
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.models.flash import flash_attention as flash_jnp
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    key = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+    nonce = jnp.asarray(rng.integers(0, 2 ** 32, 3, dtype=np.uint32))
+
+    for mb in [1]:
+        words = jnp.asarray(rng.integers(0, 2 ** 32, mb * (1 << 18),
+                                         dtype=np.uint32))
+        t = time_fn(lambda: cops.encrypt_words(key, nonce, words),
+                    warmup=1, iters=3)
+        rows.append((f"kern.chacha20.{mb}MB", t,
+                     f"{mb / (t / 1e6):.1f}MB/s"))
+        r = jnp.uint32(12345)
+        s = jnp.uint32(6789)
+        t = time_fn(lambda: mops.mac(words, r, s, tile=4096),
+                    warmup=1, iters=3)
+        rows.append((f"kern.cwmac.{mb}MB", t, f"{mb / (t / 1e6):.1f}MB/s"))
+
+    B, H, D = 1, 2, 32
+    for S in [256]:
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+        flops = 4 * B * H * S * S * D / 2  # causal
+        t = time_fn(lambda: flash_attention_bhsd(q, k, v, causal=True,
+                                                 q_chunk=128, kv_chunk=128),
+                    warmup=1, iters=3)
+        rows.append((f"kern.flash_pallas.S{S}", t,
+                     f"{flops / (t / 1e6) / 1e9:.2f}GFLOP/s"))
+        qb, kb, vb = (x.swapaxes(1, 2) for x in (q, k, v))
+        t2 = time_fn(lambda: flash_jnp(qb, kb, vb, True, 128, 128),
+                     warmup=1, iters=3)
+        rows.append((f"kern.flash_jnp.S{S}", t2,
+                     f"{flops / (t2 / 1e6) / 1e9:.2f}GFLOP/s"))
+    return rows

@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by launch/dryrun.py) and prints
+per-cell terms; the derived column carries the dominant term + roofline
+fraction.  Run the dry-run first: PYTHONPATH=src python -m repro.launch.dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(quick: bool = False):
+    rows = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline.missing", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun")]
+    for f in files:
+        rec = json.load(open(f))
+        cell = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            rows.append((f"roofline.{cell}", 0.0, "SKIP(spec)"))
+            continue
+        if rec["status"] != "ok":
+            rows.append((f"roofline.{cell}", 0.0, "ERROR"))
+            continue
+        r = rec["roofline"]
+        dom = r["dominant"][2:].replace("_s", "")
+        step_s = max(r["t_compute_s"], r["t_mem_s"], r["t_coll_s"])
+        rows.append((
+            f"roofline.{cell}", step_s * 1e6,
+            f"dom={dom} frac={r['roofline_fraction']:.3f} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"mem={rec['memory']['peak_estimate_bytes'] / 1e9:.1f}GB"))
+    return rows

@@ -1,0 +1,42 @@
+"""Paper Fig. 8: completion time scaling only the (most loaded) mapper
+stage from 1..16 workers; filter and reducer stay at 1 worker each."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SecureStreamConfig
+from repro.core.pipeline import Pipeline, Stage
+from repro.data.synthetic import CARRIER_WORD, DELAY_WORD, flight_chunks
+
+CHUNK = 512
+
+
+def run(quick: bool = False):
+    rows = []
+    n_records = 8_192 if quick else 8_192
+    reps = 2 if quick else 2
+    mapper_counts = [1, 2, 4] if quick else [1, 2, 4, 8, 16]
+    for w in mapper_counts:
+        times = []
+        for rep in range(reps):
+            def reduce_fn(acc, chunk):
+                delay = np.asarray(chunk[:, DELAY_WORD]).astype(np.int64)
+                acc["n"] += int((delay > 0).sum())
+                return acc
+
+            p = Pipeline([
+                Stage("mapper", op="identity", workers=w),
+                Stage("filter", op="delay_filter_u32", const=15, workers=1),
+                Stage("reducer", op="custom", reduce_fn=reduce_fn,
+                      reduce_init={"n": 0}, workers=1),
+            ], SecureStreamConfig(mode="enclave"))
+            t0 = time.perf_counter()
+            p.run(jnp.asarray(c) for c in
+                  flight_chunks(n_records, CHUNK * w, seed=rep))
+            times.append(time.perf_counter() - t0)
+        rows.append((f"scaling_mappers.m{w}", float(np.mean(times)) * 1e6,
+                     f"std={float(np.std(times)) * 1e6:.0f}us"))
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 7: completion time vs workers-per-stage (all stages enclave).
+Repeated 5 times; reports mean and standard deviation."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_pipeline_throughput import _pipeline, CHUNK
+
+
+def run(quick: bool = False):
+    rows = []
+    n_records = 8_192 if quick else 8_192
+    reps = 2 if quick else 2
+    for w in ([1, 2] if quick else [1, 2, 4]):
+        times = []
+        for rep in range(reps):
+            p = _pipeline("enclave", w)
+            t0 = time.perf_counter()
+            p.run(jnp.asarray(c) for c in __import__(
+                "repro.data.synthetic", fromlist=["flight_chunks"]
+            ).flight_chunks(n_records, CHUNK * w, seed=rep))
+            times.append(time.perf_counter() - t0)
+        mean, std = float(np.mean(times)), float(np.std(times))
+        rows.append((f"scaling_stages.w{w}", mean * 1e6,
+                     f"std={std * 1e6:.0f}us"))
+    return rows

@@ -1,0 +1,34 @@
+"""Benchmark utilities: timing + CSV emission (`name,us_per_call,derived`)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+            isinstance(r, jax.Array) else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        if isinstance(r, jax.Array):
+            r.block_until_ready()
+        else:
+            jax.tree.map(lambda x: x.block_until_ready()
+                         if isinstance(x, jax.Array) else x, r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

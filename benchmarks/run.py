@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+Output: CSV rows ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    ("ecall", "benchmarks.bench_ecall"),                 # §5.3 µbench 1
+    ("chunk_copy", "benchmarks.bench_chunk_copy"),       # Fig. 4
+    ("enclave_compute", "benchmarks.bench_enclave_compute"),  # Fig. 5 / T.2
+    ("pipeline", "benchmarks.bench_pipeline_throughput"),     # Fig. 6
+    ("scaling_stages", "benchmarks.bench_scaling_stages"),    # Fig. 7
+    ("scaling_mappers", "benchmarks.bench_scaling_mappers"),  # Fig. 8
+    ("loc", "benchmarks.bench_loc"),                     # Table 1
+    ("kernels", "benchmarks.bench_kernels"),             # beyond-paper
+    ("roofline", "benchmarks.bench_roofline"),           # §Roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        try:
+            m = __import__(mod, fromlist=["run"])
+            emit(m.run(quick=args.quick))
+        except Exception:
+            failed += 1
+            print(f"{name},0.0,BENCH-ERROR", file=sys.stdout)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"{failed} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: the paper's Listing-2 program + a 3-stage secure pipeline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SecureStreamConfig
+from repro.core import Observable, Pipeline, Stage
+from repro.data.synthetic import CARRIER_WORD, DELAY_WORD, flight_chunks
+
+
+def listing2_average_age():
+    """RxLua Listing 2: average age of the adult population — in repro."""
+    people_ages = jnp.asarray(
+        np.random.default_rng(0).integers(1, 90, 4096).astype(np.float32))
+    result = (
+        Observable.from_array(people_ages, chunk_rows=512)
+        .map(lambda age: age)                      # :map(person.age)
+        .filter(lambda age: age > 18)              # :filter(age > 18)
+        .reduce(lambda acc, age, m: {               # :reduce(...)
+            "sum": acc["sum"] + float(jnp.sum(age * m)),
+            "count": acc["count"] + float(jnp.sum(m))},
+            init={"sum": 0.0, "count": 0.0})
+        .subscribe(
+            on_complete=lambda: print("Process complete!"))
+    )
+    print(f"Adult people average: {result['sum'] / result['count']:.2f}")
+
+
+def secure_flight_pipeline():
+    """map -> filter -> reduce over sealed flight records (enclave mode)."""
+    def reduce_fn(acc, chunk):
+        carrier = np.asarray(chunk[:, CARRIER_WORD]).astype(np.int64)
+        delay = np.asarray(chunk[:, DELAY_WORD]).astype(np.int64)
+        valid = delay > 0
+        acc["count"] = acc["count"] + np.bincount(carrier[valid], minlength=20)
+        acc["sum"] = acc["sum"] + np.bincount(
+            carrier[valid], weights=delay[valid], minlength=20)
+        return acc
+
+    pipe = Pipeline(
+        [
+            Stage("sgx_mapper", op="identity", sgx=True),
+            Stage("sgx_filter", op="delay_filter_u32", const=15, sgx=True),
+            Stage("reducer", op="custom", reduce_fn=reduce_fn,
+                  reduce_init={"count": np.zeros(20), "sum": np.zeros(20)}),
+        ],
+        SecureStreamConfig(mode="enclave"),
+    )
+    out = pipe.run(jnp.asarray(c) for c in flight_chunks(8192, 1024))
+    worst = int(np.argmax(out["sum"] / np.maximum(out["count"], 1)))
+    print(f"delayed flights: {int(out['count'].sum())}; "
+          f"worst carrier: #{worst} "
+          f"(avg {out['sum'][worst] / max(out['count'][worst], 1):.1f} min)")
+    print("stage report:", pipe.report())
+
+
+if __name__ == "__main__":
+    listing2_average_age()
+    secure_flight_pipeline()

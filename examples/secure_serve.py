@@ -1,0 +1,75 @@
+"""Secure serving: batched requests arrive as AEAD-sealed prompt chunks,
+are opened at ingest, prefilled, then decoded greedily with a KV cache.
+
+Run:  PYTHONPATH=src python examples/secure_serve.py --requests 4 --new 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
+                                ShapeConfig)
+from repro.core.enclave import egress, ingress
+from repro.crypto.keys import derive_stage_key, root_key_from_seed
+from repro.dist.meshctx import local_mesh_context
+from repro.models import api
+from repro.serve.engine import make_decode_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(arch_id="serve-demo", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=512,
+                      vocab_size=2048, head_dim=32, tie_embeddings=True)
+    run = RunConfig(model=cfg,
+                    shape=ShapeConfig("serve", args.prompt_len,
+                                      args.requests, "decode"),
+                    optimizer=OptimizerConfig())
+    ctx = local_mesh_context()
+    params = api.init_params(cfg, jax.random.key(0))
+
+    # --- sealed request ingestion (clients encrypt prompts to the server)
+    key = derive_stage_key(root_key_from_seed(7), "client-requests", 0)
+    rng = np.random.default_rng(0)
+    prompts_np = rng.integers(0, cfg.vocab_size,
+                              (args.requests, args.prompt_len),
+                              dtype=np.int32)
+    sealed = ingress("encrypted", key, 0, jnp.asarray(prompts_np))
+    prompts, ok = egress("encrypted", key, sealed)
+    assert bool(ok), "request MAC failure"
+    print(f"ingested {args.requests} sealed prompts "
+          f"({prompts.shape[1]} tokens each), MAC ok")
+
+    # --- prefill + greedy decode
+    max_seq = args.prompt_len + args.new
+    t0 = time.perf_counter()
+    logits, cache = api.prefill(cfg, params, {"tokens": prompts}, ctx,
+                                max_seq=max_seq)
+    decode = jax.jit(make_decode_step(run, ctx), donate_argnums=(3,))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    outs = [tok]
+    pos = jnp.int32(args.prompt_len)
+    for i in range(args.new - 1):
+        tok, _, cache = decode(params, tok, pos, cache)
+        outs.append(tok)
+        pos = pos + 1
+    gen = jnp.concatenate(outs, axis=1)
+    dt = time.perf_counter() - t0
+    tps = args.requests * args.new / dt
+    print(f"generated {args.new} tokens x {args.requests} requests "
+          f"in {dt:.2f}s ({tps:.1f} tok/s)")
+    for r in range(min(args.requests, 2)):
+        print(f"  req{r}: ...{list(np.asarray(prompts)[r][-4:])} -> "
+              f"{list(np.asarray(gen)[r][:8])}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun JSONs."""
+import glob
+import json
+import os
+import sys
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def main():
+    recs = [json.load(open(f)) for f in sorted(glob.glob(f"{DRY}/*.json"))]
+    by = {(r["arch"], r["shape"], r["mesh"]): r for r in recs}
+    archs, shapes = [], []
+    for r in recs:
+        if r["arch"] not in archs:
+            archs.append(r["arch"])
+        if r["shape"] not in shapes:
+            shapes.append(r["shape"])
+
+    print("### Single-pod (16x16 = 256 chips) roofline table\n")
+    print("| arch | shape | status | compile_s | mem/chip GB | t_compute s "
+          "| t_mem s | t_coll s | dominant | MODEL_FLOPS/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = by.get((a, s, "pod16x16"))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {a} | {s} | SKIP (spec) | — | — | — | — | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {a} | {s} | ERROR | — | — | — | — | — | — | — | — |")
+                continue
+            rf = r["roofline"]
+            mem = r["memory"]["peak_estimate_bytes"] / 1e9
+            print(f"| {a} | {s} | ok | {r['compile_s']:.0f} | {mem:.1f} "
+                  f"| {rf['t_compute_s']:.3g} | {rf['t_mem_s']:.3g} "
+                  f"| {rf['t_coll_s']:.3g} | {rf['dominant'][2:]} "
+                  f"| {rf['useful_flops_ratio']:.2f} "
+                  f"| {rf['roofline_fraction']:.3f} |")
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) dry-run\n")
+    print("| arch | shape | status | compile_s | mem/chip GB | collectives "
+          "(per-chip bytes by kind) |")
+    print("|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = by.get((a, s, "pod2x16x16"))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {a} | {s} | SKIP (spec) | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {a} | {s} | ERROR | — | — | — |")
+                continue
+            mem = r["memory"]["peak_estimate_bytes"] / 1e9
+            kinds = r["roofline"]["collective_by_kind"]
+            ks = " ".join(f"{k.split('-')[-1]}={v / 1e9:.2g}GB"
+                          for k, v in sorted(kinds.items()))
+            print(f"| {a} | {s} | ok | {r['compile_s']:.0f} | {mem:.1f} "
+                  f"| {ks} |")
+
+
+if __name__ == "__main__":
+    main()

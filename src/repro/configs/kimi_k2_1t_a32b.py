@@ -1,0 +1,33 @@
+"""Kimi K2 — trillion-parameter MoE (arXiv:2501.kimi2, paper-table).
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048/expert vocab=163840, MoE 384e top-8.
+"""
+from repro.configs.base import (ModelConfig, MoEConfig, OptimizerConfig,
+                                ShardingConfig)
+
+ARCH_ID = "kimi-k2-1t-a32b"
+
+MODEL = ModelConfig(
+    arch_id=ARCH_ID,
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=0,
+    vocab_size=163_840,
+    head_dim=112,
+    moe=MoEConfig(num_experts=384, top_k=8, d_expert=2048),
+    rope_theta=50_000.0,
+)
+
+# 1T-param training is HBM-gated: use a factored, stateless-momentum
+# optimizer with ZeRO sharding (see DESIGN.md §5 and EXPERIMENTS §Dry-run).
+OPTIMIZER = OptimizerConfig(name="adafactor", zero_sharding=True)
+
+# Expert weights FSDP-sharded over the data axis (129 GB -> 8 GB per chip,
+# re-gathered per layer); residual stream sequence-parallel over the model
+# axis (remat stash 57 GB -> 3.6 GB per chip).
+SHARDING = (ShardingConfig()
+            .with_rule("moe_ff", ("data",))
+            .with_rule("seq_res", ("model",)))

@@ -1,0 +1,36 @@
+"""Llama-3.2-1B (hf:meta-llama/Llama-3.2-1B) — small dense llama3.
+
+16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+from repro.configs.base import (ModelConfig, OptimizerConfig,
+                                ShardingConfig)
+
+ARCH_ID = "llama3.2-1b"
+
+MODEL = ModelConfig(
+    arch_id=ARCH_ID,
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128_256,
+    head_dim=64,
+    tie_embeddings=True,
+    rope_theta=500_000.0,
+)
+
+OPTIMIZER = OptimizerConfig(name="adamw", zero_sharding=True)
+
+# A 1.2B model does not want TP=16: Megatron activation all-reduces dominate
+# (baseline: t_coll/t_compute = 10x, EXPERIMENTS.md §Perf llama iteration 1).
+# Right-size: pure data parallelism over ALL mesh axes (batch 256 = 16x16),
+# ZeRO optimizer states sharded over both axes.
+SHARDING = (ShardingConfig()
+            .with_rule("batch", ("pod", "data", "model"))
+            .with_rule("heads", ())
+            .with_rule("kv_heads", ())
+            .with_rule("mlp", ())
+            .with_rule("vocab", ())
+            .with_rule("zero", ("data", "model")))

@@ -1,0 +1,3 @@
+from repro.core.observable import Observable  # noqa: F401
+from repro.core.pipeline import Pipeline, Stage  # noqa: F401
+from repro.core.enclave import EnclaveExecutor, SealedChunk  # noqa: F401

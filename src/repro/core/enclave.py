@@ -1,0 +1,164 @@
+"""Enclave executor: runs operators under one of the paper's three modes.
+
+Fig. 6 of the paper compares three deployments; they map here to:
+
+* ``plain``     — operator on cleartext chunks (baseline, unsafe);
+* ``encrypted`` — AEAD decrypt -> operator -> AEAD encrypt as *separate* XLA
+  ops: ciphertext on the wire/at rest, but plaintext transits HBM during
+  compute (paper: "encrypted data but skip the enclaves" — trusts the
+  operator);
+* ``enclave``   — the fused Pallas kernel (repro.kernels.enclave_map):
+  plaintext exists only in VMEM inside the kernel, HBM sees ciphertext
+  end-to-end.  Operators must come from the static registry (the paper's
+  no-dynamic-linking constraint, §4).
+
+Integrity: every chunk carries a CW-MAC tag; ``open`` failures surface as
+dropped chunks + an error count (reactive ``on_error``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto import aead, chacha20, cwmac
+from repro.crypto.keys import StageKey
+from repro.kernels.enclave_map import ops as enclave_ops
+
+U32 = jnp.uint32
+
+
+@dataclass
+class SealedChunk:
+    """Fixed-shape ciphertext unit flowing between stages."""
+    blocks: jax.Array             # (N, 16) u32 ciphertext (or plaintext words
+                                  # in plain mode)
+    tag: Optional[jax.Array]      # (2,) u32 CW-MAC or None
+    counter: int                  # per-stream chunk counter -> nonce
+    meta: Tuple                   # tensor framing (shape, dtype, pad)
+    n_words: int                  # valid words before block padding
+
+
+def _words_to_blocks(words: jax.Array) -> Tuple[jax.Array, int]:
+    n = words.shape[0]
+    n_blocks = (n + 15) // 16
+    padded = jnp.pad(words, (0, n_blocks * 16 - n))
+    return padded.reshape(n_blocks, 16), n
+
+
+def seal_tensor(key: StageKey, counter: int, x: jax.Array) -> SealedChunk:
+    words, meta = aead.tensor_to_words(x)
+    nonce = jnp.asarray(key.nonce(counter))
+    ct, tag = aead.seal(jnp.asarray(key.key), nonce, words)
+    blocks, n = _words_to_blocks(ct)
+    return SealedChunk(blocks=blocks, tag=tag, counter=counter, meta=meta,
+                       n_words=n)
+
+
+def open_tensor(key: StageKey, chunk: SealedChunk) -> Tuple[jax.Array, jax.Array]:
+    nonce = jnp.asarray(key.nonce(chunk.counter))
+    ct = chunk.blocks.reshape(-1)[:chunk.n_words]
+    pt, ok = aead.open_(jnp.asarray(key.key), nonce, ct, chunk.tag)
+    return aead.words_to_tensor(pt, chunk.meta), ok
+
+
+def plain_chunk(counter: int, x: jax.Array) -> SealedChunk:
+    words, meta = aead.tensor_to_words(x)
+    blocks, n = _words_to_blocks(words)
+    return SealedChunk(blocks=blocks, tag=None, counter=counter, meta=meta,
+                       n_words=n)
+
+
+def unplain_chunk(chunk: SealedChunk) -> jax.Array:
+    return aead.words_to_tensor(chunk.blocks.reshape(-1)[:chunk.n_words],
+                                chunk.meta)
+
+
+class EnclaveExecutor:
+    """Executes one stage's operator under the configured security mode."""
+
+    def __init__(self, mode: str, key_in: StageKey, key_out: StageKey,
+                 block_rows: int = 512):
+        assert mode in ("plain", "encrypted", "enclave"), mode
+        self.mode = mode
+        self.key_in = key_in
+        self.key_out = key_out
+        self.block_rows = block_rows
+        self.errors = 0
+
+    # -- generic python/jnp operator (plain + encrypted modes) --------------
+
+    def run(self, fn: Callable[[jax.Array], jax.Array],
+            chunk: SealedChunk) -> Optional[SealedChunk]:
+        if self.mode == "plain":
+            x = unplain_chunk(chunk)
+            return plain_chunk(chunk.counter, fn(x))
+        if self.mode == "encrypted":
+            x, ok = open_tensor(self.key_in, chunk)
+            if not bool(ok):
+                self.errors += 1
+                return None
+            return seal_tensor(self.key_out, chunk.counter, fn(x))
+        raise ValueError(
+            "enclave mode only executes registered static operators "
+            "(run_static); arbitrary closures cannot be attested — "
+            "the paper's no-dynamic-linking rule.")
+
+    # -- static registered operator (all modes; enclave mode fused) ---------
+
+    def run_static(self, op: str, const: float,
+                   chunk: SealedChunk) -> Optional[SealedChunk]:
+        if self.mode in ("plain", "encrypted"):
+            fn = lambda x: _apply_static_f32(op, const, x)
+            return self.run(fn, chunk)
+        # enclave: fused decrypt->op->encrypt, VMEM-confined plaintext.
+        nonce = jnp.asarray(self.key_in.nonce(chunk.counter))
+        pad_rows = (-chunk.blocks.shape[0]) % self.block_rows
+        blocks = jnp.pad(chunk.blocks, ((0, pad_rows), (0, 0)))
+        # MAC check on ciphertext happens outside the enclave (it is public
+        # data); the keystream offset for payload is counter0=1.
+        r1, s1, r2, s2 = aead.derive_mac_keys(jnp.asarray(self.key_in.key),
+                                              nonce)
+        ct_words = chunk.blocks.reshape(-1)[:chunk.n_words]
+        ok = jnp.all(cwmac.mac2(ct_words, r1, s1, r2, s2) == chunk.tag)
+        if not bool(ok):
+            self.errors += 1
+            return None
+        out_blocks = enclave_ops.enclave_map(
+            jnp.asarray(self.key_in.key), jnp.asarray(self.key_out.key),
+            nonce, 1, blocks, op=op, const=const,
+            block_rows=self.block_rows)[:chunk.blocks.shape[0]]
+        # re-tag under the outbound key
+        nonce_out = jnp.asarray(self.key_out.nonce(chunk.counter))
+        ro1, so1, ro2, so2 = aead.derive_mac_keys(
+            jnp.asarray(self.key_out.key), nonce_out)
+        out_words = out_blocks.reshape(-1)[:chunk.n_words]
+        tag = cwmac.mac2(out_words, ro1, so1, ro2, so2)
+        return SealedChunk(blocks=out_blocks, tag=tag, counter=chunk.counter,
+                           meta=chunk.meta, n_words=chunk.n_words)
+
+
+def _apply_static_f32(op: str, const: float, x: jax.Array) -> jax.Array:
+    """jnp mirror of the kernel's static op registry (on decoded tensors)."""
+    words, meta = aead.tensor_to_words(x)
+    blocks, n = _words_to_blocks(words)
+    out = enclave_ops.OPS[op](blocks, const)
+    return aead.words_to_tensor(out.reshape(-1)[:n], meta)
+
+
+def ingress(mode: str, key: StageKey, counter: int,
+            x: jax.Array) -> SealedChunk:
+    """Bring a source tensor into the pipeline under the security mode."""
+    if mode == "plain":
+        return plain_chunk(counter, x)
+    return seal_tensor(key, counter, x)
+
+
+def egress(mode: str, key: StageKey, chunk: SealedChunk):
+    """Take a result out of the pipeline (trusted subscriber)."""
+    if mode == "plain":
+        return unplain_chunk(chunk), jnp.bool_(True)
+    return open_tensor(key, chunk)

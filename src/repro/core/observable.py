@@ -1,0 +1,151 @@
+"""Rx-style Observable combinators over chunked tensor streams.
+
+The paper builds pipelines from RxLua observables (``:map/:filter/:reduce/
+:subscribe``, Listing 2).  The TPU-native translation: a *stream* is a
+sequence of fixed-shape chunks (dict of arrays or a single array); each
+operator is a pure jnp function over a chunk (vectorized — one chunk is the
+unit of enclave transfer, paper Fig. 4); ``filter`` is dense (validity
+mask), because dataflow on accelerators cannot drop rows dynamically.
+
+Example (the paper's Listing-2 average-age program)::
+
+    (Observable.from_chunks(people)
+        .map(lambda c: c["age"])
+        .filter(lambda age: age > 18)
+        .reduce(lambda acc, age, m: {"sum": acc["sum"] + (age*m).sum(),
+                                     "count": acc["count"] + m.sum()},
+                init={"sum": 0.0, "count": 0.0})
+        .subscribe(on_next=..., on_complete=...))
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Chunk = Any  # array or dict-of-arrays
+
+
+@dataclass(frozen=True)
+class Op:
+    kind: str                     # map | filter | reduce | window | key_by
+    fn: Optional[Callable] = None
+    init: Any = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class Observable:
+    """A lazily-composed operator chain over a chunk source."""
+
+    def __init__(self, source: Iterable[Chunk], ops: Tuple[Op, ...] = ()):
+        self._source = source
+        self._ops = ops
+
+    # ---------------------------------------------------------- constructors
+
+    @staticmethod
+    def from_chunks(chunks: Iterable[Chunk]) -> "Observable":
+        return Observable(chunks)
+
+    @staticmethod
+    def from_array(x, chunk_rows: int) -> "Observable":
+        n = x.shape[0] // chunk_rows
+
+        def gen():
+            for i in range(n):
+                yield x[i * chunk_rows:(i + 1) * chunk_rows]
+        return Observable(gen())
+
+    # ------------------------------------------------------------- operators
+
+    def _with(self, op: Op) -> "Observable":
+        return Observable(self._source, self._ops + (op,))
+
+    def map(self, fn: Callable[[Chunk], Chunk]) -> "Observable":
+        return self._with(Op("map", fn))
+
+    def filter(self, pred: Callable[[Chunk], jax.Array]) -> "Observable":
+        """Dense filter: downstream sees (chunk, mask)."""
+        return self._with(Op("filter", pred))
+
+    def reduce(self, fn: Callable[[Any, Chunk, jax.Array], Any],
+               init: Any) -> "Observable":
+        return self._with(Op("reduce", fn, init=init))
+
+    def window(self, n_chunks: int) -> "Observable":
+        return self._with(Op("window", meta={"n": n_chunks}))
+
+    def key_by(self, key_fn: Callable[[Chunk], jax.Array],
+               num_keys: int) -> "Observable":
+        return self._with(Op("key_by", key_fn, meta={"num_keys": num_keys}))
+
+    # ------------------------------------------------------------- execution
+
+    def subscribe(self, on_next: Optional[Callable] = None,
+                  on_error: Optional[Callable] = None,
+                  on_complete: Optional[Callable] = None) -> Any:
+        """Drive the stream to completion (observer pattern, paper §4)."""
+        state = {"reduce": None, "reduce_init": False, "window": []}
+        final = None
+        try:
+            for chunk in self._source:
+                result = self._apply_ops(chunk, state)
+                if result is not None and on_next is not None:
+                    on_next(result)
+                final = result if result is not None else final
+        except Exception as e:  # noqa: BLE001 — surfaced to the observer
+            if on_error is not None:
+                on_error(e)
+                return None
+            raise
+        if state["reduce_init"]:
+            final = state["reduce"]
+            if on_next is not None:
+                on_next(final)
+        if on_complete is not None:
+            on_complete()
+        return final
+
+    def _apply_ops(self, chunk: Chunk, state: Dict) -> Optional[Chunk]:
+        mask = None
+        for op in self._ops:
+            if op.kind == "map":
+                if mask is None:
+                    chunk = op.fn(chunk)
+                else:
+                    chunk = op.fn(chunk)  # maps are maskwise-transparent
+            elif op.kind == "filter":
+                m = op.fn(chunk)
+                mask = m if mask is None else (mask & m)
+            elif op.kind == "reduce":
+                if not state["reduce_init"]:
+                    state["reduce"] = op.init
+                    state["reduce_init"] = True
+                m = mask if mask is not None else None
+                state["reduce"] = op.fn(state["reduce"], chunk, m)
+                return None  # reduce swallows chunks; emits at complete
+            elif op.kind == "window":
+                state["window"].append((chunk, mask))
+                if len(state["window"]) < op.meta["n"]:
+                    return None
+                chunks = state["window"]
+                state["window"] = []
+                chunk = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                     *[c for c, _ in chunks])
+                masks = [m for _, m in chunks]
+                mask = None if masks[0] is None else jnp.concatenate(masks)
+            elif op.kind == "key_by":
+                keys = op.fn(chunk)
+                chunk = {"data": chunk, "keys": keys}
+        if mask is not None:
+            return {"data": chunk, "mask": mask}
+        return chunk
+
+    # ------------------------------------------------------------ inspection
+
+    @property
+    def ops(self) -> Tuple[Op, ...]:
+        return self._ops

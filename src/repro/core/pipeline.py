@@ -1,0 +1,153 @@
+"""Pipeline builder: stages + routers -> an executable secure dataflow.
+
+Mirrors the paper's Compose description (Listing 1): a pipeline is a list
+of named stages, each with an operator, a worker count, and a placement
+("sgx" workers are the ones whose operator runs under the enclave
+executor).  Routers between stages apply fair-queue (in) / round-robin
+(out) chunk scheduling — repro.core.router.
+
+Execution is streaming: chunks flow stage to stage; each stage re-keys the
+chunk for its outbound edge (per-stage session keys, repro.crypto.keys).
+Per-stage counters, byte totals, and MAC failures feed the benchmarks
+(paper Fig. 6/7/8).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SecureStreamConfig
+from repro.core import router as R
+from repro.core.enclave import (EnclaveExecutor, SealedChunk, egress,
+                                ingress)
+from repro.crypto.keys import StageKey, derive_stage_key, root_key_from_seed
+
+
+@dataclass
+class Stage:
+    name: str
+    op: str                              # static registry op name, or "custom"
+    const: float = 0.0
+    fn: Optional[Callable] = None        # custom fn (plain/encrypted only)
+    workers: int = 1
+    sgx: bool = True                     # paper: constraint:type==sgx
+    reduce_fn: Optional[Callable] = None # terminal reduce (runs at egress)
+    reduce_init: Any = None
+
+
+@dataclass
+class StageMetrics:
+    chunks: int = 0
+    bytes: int = 0
+    seconds: float = 0.0
+    mac_failures: int = 0
+
+    @property
+    def throughput_mbps(self) -> float:
+        return (self.bytes / 1e6) / self.seconds if self.seconds else 0.0
+
+
+class Pipeline:
+    def __init__(self, stages: Sequence[Stage],
+                 secure: SecureStreamConfig = SecureStreamConfig(),
+                 seed: int = 0):
+        self.stages = list(stages)
+        self.secure = secure
+        root = root_key_from_seed(seed)
+        # edge i connects stage i-1 -> i; key per edge (+ source and sink).
+        self.keys: List[StageKey] = [
+            derive_stage_key(root, f"edge{i}", i)
+            for i in range(len(self.stages) + 1)
+        ]
+        self.metrics: Dict[str, StageMetrics] = {
+            s.name: StageMetrics() for s in self.stages}
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, source: Iterable[jax.Array],
+            on_result: Optional[Callable] = None) -> Any:
+        """Stream source tensors through all stages; returns the terminal
+        reduce value (if the last stage reduces) or the last chunk."""
+        mode = self.secure.mode
+        execs = []
+        for i, st in enumerate(self.stages):
+            st_mode = mode if st.sgx else ("plain" if mode == "plain"
+                                           else "encrypted")
+            execs.append(EnclaveExecutor(st_mode, self.keys[i],
+                                         self.keys[i + 1]))
+
+        reduce_state: Any = None
+        reduce_started = False
+        final = None
+
+        for counter, x in enumerate(source):
+            chunk = ingress(mode, self.keys[0], counter, x)
+            alive = True
+            for i, (st, ex) in enumerate(zip(self.stages, execs)):
+                t0 = time.perf_counter()
+                m = self.metrics[st.name]
+                if st.reduce_fn is not None:
+                    # terminal reduce: decrypt at the sink edge (trusted
+                    # subscriber) and fold.
+                    val, ok = egress(ex.mode if ex.mode != "plain" else "plain",
+                                     self.keys[i], chunk)
+                    if not bool(ok):
+                        m.mac_failures += 1
+                        alive = False
+                        break
+                    if not reduce_started:
+                        reduce_state = st.reduce_init
+                        reduce_started = True
+                    reduce_state = st.reduce_fn(reduce_state, val)
+                    m.chunks += 1
+                    m.bytes += int(chunk.n_words) * 4
+                    m.seconds += time.perf_counter() - t0
+                    alive = False  # reduce swallows the chunk
+                    break
+                if st.fn is not None:
+                    out = ex.run(st.fn, chunk)
+                else:
+                    out = ex.run_static(st.op, st.const, chunk)
+                m.seconds += time.perf_counter() - t0
+                if out is None:
+                    m.mac_failures += 1
+                    alive = False
+                    break
+                m.chunks += 1
+                m.bytes += int(chunk.n_words) * 4
+                chunk = out
+            if alive:
+                result, ok = egress(mode, self.keys[len(self.stages)], chunk)
+                final = result
+                if on_result is not None and bool(ok):
+                    on_result(result)
+
+        if reduce_started:
+            return reduce_state
+        return final
+
+    # ------------------------------------------------------------- elastic
+
+    def scale_stage(self, name: str, workers: int) -> "Pipeline":
+        """Elastic scaling: change a stage's worker count (paper §5.5)."""
+        stages = [
+            Stage(**{**s.__dict__, "workers": workers}) if s.name == name
+            else s for s in self.stages
+        ]
+        p = Pipeline(stages, self.secure)
+        p.keys = self.keys
+        return p
+
+    def report(self) -> Dict[str, Dict[str, float]]:
+        return {
+            name: {"chunks": m.chunks, "bytes": m.bytes,
+                   "seconds": round(m.seconds, 4),
+                   "throughput_mbps": round(m.throughput_mbps, 2),
+                   "mac_failures": m.mac_failures}
+            for name, m in self.metrics.items()
+        }

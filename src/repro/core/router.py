@@ -1,0 +1,101 @@
+"""Router components: the paper's ZeroMQ push/pull brokers, TPU-native.
+
+A router connects two stages.  Inbound it *fair-queues* (paper: Pull socket
+with fair-queuing over anonymous upstream workers); outbound it dispatches
+to downstream workers *round-robin* (Push socket).  Here workers are mesh
+shards, so the policies become deterministic resharding schedules:
+
+* ``round_robin``  — chunk i of the stream goes to worker i mod W;
+* ``fair_queue``   — merge W worker sub-streams, one chunk each in turn;
+* ``shuffle``      — all-to-all over a key (the map->reduce boundary);
+* ``keyed``        — consistent routing by key hash (stateful reducers).
+
+On a real mesh the shuffle/keyed policies lower onto ``lax.all_to_all``
+via shard_map (`shuffle_sharded`); the chunk-level policies drive the
+pipeline scheduler (repro.core.pipeline).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, Iterator, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Chunk = Any
+
+
+@dataclass(frozen=True)
+class RouterPolicy:
+    kind: str                     # round_robin | fair_queue | shuffle | keyed
+    num_keys: int = 0
+
+
+def round_robin(chunks: Iterable[Chunk], num_workers: int) -> List[List[Chunk]]:
+    """Outbound dispatch: chunk i -> worker i mod W (paper's Push socket)."""
+    queues: List[List[Chunk]] = [[] for _ in range(num_workers)]
+    for i, c in enumerate(chunks):
+        queues[i % num_workers].append(c)
+    return queues
+
+
+def fair_queue(worker_streams: Sequence[Iterable[Chunk]]) -> Iterator[Chunk]:
+    """Inbound merge: one chunk from each live worker in turn (Pull socket)."""
+    iters = [iter(s) for s in worker_streams]
+    live = list(range(len(iters)))
+    while live:
+        nxt = []
+        for w in live:
+            try:
+                yield next(iters[w])
+                nxt.append(w)
+            except StopIteration:
+                pass
+        live = nxt
+
+
+def shuffle_by_key(chunk: jax.Array, keys: jax.Array, num_keys: int,
+                   mask=None):
+    """Group rows of a chunk by key (dense): returns (num_keys, cap, ...)
+    buckets + per-bucket counts. The dataflow equivalent of a keyed shuffle."""
+    n = keys.shape[0]
+    cap = n  # worst case: all rows one key (dense bound)
+    order = jnp.argsort(keys)
+    sk = keys[order]
+    valid = jnp.ones((n,), bool) if mask is None else mask[order]
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32), sk,
+                                 num_segments=num_keys)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    # position within bucket
+    ones = jnp.ones((n,), jnp.int32)
+    pos_all = jnp.cumsum(ones) - 1
+    slot = pos_all - jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jax.ops.segment_sum(ones, sk, num_segments=num_keys))[:-1]]
+    )[sk]
+    dest = sk * cap + slot
+    flat = jnp.zeros((num_keys * cap, *chunk.shape[1:]), chunk.dtype)
+    flat = flat.at[dest].set(jnp.where(valid.reshape(-1, *([1] * (chunk.ndim - 1))),
+                                       chunk[order], 0))
+    return flat.reshape(num_keys, cap, *chunk.shape[1:]), counts
+
+
+def shuffle_sharded(x: jax.Array, mesh, axis: str = "model"):
+    """All-to-all keyed shuffle across a mesh axis (router as collective).
+
+    x: (W, n, ...) where W == mesh.shape[axis]; row block j on worker i is
+    sent to worker j — the ZeroMQ 'shuffler' as one lax.all_to_all.
+    """
+    from jax import shard_map
+
+    def block(xb):
+        return jax.lax.all_to_all(xb, axis, 0, 0, tiled=True)
+
+    W = mesh.shape[axis]
+    spec = P(axis, *([None] * (x.ndim - 1)))
+    return shard_map(block, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_vma=False)(x)

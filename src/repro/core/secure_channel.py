@@ -1,0 +1,49 @@
+"""AEAD-sealed tensor channels between pipeline-parallel stages.
+
+The paper encrypts every stream between workers (SSL + enclave re-keying).
+For model pipeline parallelism the analogous boundary is the activation
+tensor crossing a stage boundary over ICI/DCN: ``protect`` seals it under
+the edge key before the collective permute, ``unprotect`` opens it on the
+receiving stage.  Because ChaCha20-CTR is a pure XOR stream and the CW-MAC
+is jnp math, both compose with jit/shard_map and cost one elementwise pass.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import aead
+from repro.crypto.keys import StageKey
+
+
+def protect(key: StageKey, step: int, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array, Tuple]:
+    """Seal a tensor for the wire. Returns (ct_words, tag, meta)."""
+    words, meta = aead.tensor_to_words(x)
+    nonce = jnp.asarray(key.nonce(step))
+    ct, tag = aead.seal(jnp.asarray(key.key), nonce, words)
+    return ct, tag, meta
+
+
+def unprotect(key: StageKey, step: int, ct: jax.Array, tag: jax.Array,
+              meta: Tuple) -> Tuple[jax.Array, jax.Array]:
+    """Open a sealed tensor. Returns (tensor, ok)."""
+    nonce = jnp.asarray(key.nonce(step))
+    pt, ok = aead.open_(jnp.asarray(key.key), nonce, ct, tag)
+    return aead.words_to_tensor(pt, meta), ok
+
+
+def sealed_ppermute(key: StageKey, step: int, x: jax.Array, axis: str,
+                    perm) -> Tuple[jax.Array, jax.Array]:
+    """collective_permute of a sealed activation (inside shard_map).
+
+    The wire (ICI) carries ciphertext; each stage re-opens locally.
+    Returns (tensor, ok). Usable only where shapes are uniform across the
+    permuted axis (pipeline microbatches are).
+    """
+    ct, tag, meta = protect(key, step, x)
+    ct_r = jax.lax.ppermute(ct, axis, perm)
+    tag_r = jax.lax.ppermute(tag, axis, perm)
+    return unprotect(key, step, ct_r, tag_r, meta)

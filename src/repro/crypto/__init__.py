@@ -1,0 +1,1 @@
+from repro.crypto import aead, chacha20, cwmac, keys  # noqa: F401

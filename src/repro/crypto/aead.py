@@ -1,0 +1,79 @@
+"""AEAD over uint32 word streams: ChaCha20-CTR + CW-MAC (encrypt-then-MAC).
+
+Mirrors the ChaCha20-Poly1305 construction: the MAC keys (r1,s1,r2,s2) are
+derived from keystream block 0 (counter=0); payload encryption starts at
+counter=1.  ``seal``/``open`` operate on flat uint32 arrays — the chunked
+stream layer (repro.core) handles byte framing and per-chunk nonces.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto import chacha20, cwmac
+
+U32 = jnp.uint32
+P31 = np.uint32(0x7FFFFFFF)
+
+
+def derive_mac_keys(key: jax.Array, nonce: jax.Array) -> Tuple[jax.Array, ...]:
+    """(r1, s1, r2, s2) from keystream block 0, clamped below 2^31-1."""
+    blk = chacha20.chacha20_block(key, nonce,
+                                  jnp.zeros((1,), U32))[0]  # (16,) u32
+    clamp = lambda w: jnp.minimum(w & P31, P31 - np.uint32(1))
+    return clamp(blk[0]), clamp(blk[1]), clamp(blk[2]), clamp(blk[3])
+
+
+def seal(key: jax.Array, nonce: jax.Array,
+         plaintext: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (ciphertext (N,) u32, tag (2,) u32)."""
+    ct = chacha20.encrypt_words(key, nonce, plaintext, counter0=1)
+    r1, s1, r2, s2 = derive_mac_keys(key, nonce)
+    tag = cwmac.mac2(ct, r1, s1, r2, s2)
+    return ct, tag
+
+
+def open_(key: jax.Array, nonce: jax.Array, ciphertext: jax.Array,
+          tag: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (plaintext, ok: bool scalar). Constant-shape (jit-safe): the caller
+    decides what to do with ok=False (the stream layer drops the chunk)."""
+    r1, s1, r2, s2 = derive_mac_keys(key, nonce)
+    expect = cwmac.mac2(ciphertext, r1, s1, r2, s2)
+    ok = jnp.all(expect == tag)
+    pt = chacha20.decrypt_words(key, nonce, ciphertext, counter0=1)
+    return pt, ok
+
+
+# ---------------------------------------------------------------------------
+# dtype framing helpers (tensors <-> uint32 words)
+# ---------------------------------------------------------------------------
+
+
+def tensor_to_words(x: jax.Array) -> Tuple[jax.Array, Tuple]:
+    """Bit-cast any tensor to a flat uint32 word array (padded to 4 bytes)."""
+    raw = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint8).reshape(-1) \
+        if x.dtype != jnp.uint32 else x.reshape(-1)
+    if x.dtype == jnp.uint32:
+        return raw, (x.shape, str(x.dtype), 0)
+    pad = (-raw.shape[0]) % 4
+    raw = jnp.pad(raw, (0, pad))
+    words = jax.lax.bitcast_convert_type(raw.reshape(-1, 4), jnp.uint32)
+    return words.reshape(-1), (x.shape, str(x.dtype), pad)
+
+
+def words_to_tensor(words: jax.Array, meta: Tuple) -> jax.Array:
+    shape, dtype, pad = meta
+    if dtype == "uint32":
+        return words.reshape(shape)
+    raw = jax.lax.bitcast_convert_type(words.reshape(-1, 1),
+                                       jnp.uint8).reshape(-1)
+    if pad:
+        raw = raw[:-pad]
+    n = np.prod(shape, dtype=np.int64) if shape else 1
+    itemsize = jnp.dtype(dtype).itemsize
+    flat = jax.lax.bitcast_convert_type(
+        raw.reshape(int(n), itemsize), jnp.dtype(dtype)).reshape(shape)
+    return flat

@@ -1,0 +1,91 @@
+"""ChaCha20 stream cipher in pure JAX (uint32 lane arithmetic).
+
+The cipher is embarrassingly parallel in counter mode: every 64-byte block
+(16 uint32 words) derives its keystream independently from (key, nonce,
+counter).  That maps perfectly onto TPU vector lanes — each lane processes
+one block; the 20 rounds are elementwise adds/xors/rotates.
+
+This module is the jnp reference implementation and the oracle for the
+Pallas kernel in ``repro/kernels/chacha20``.  RFC 7539 test vectors are
+checked in tests/test_crypto.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+CONSTANTS = np.array([0x61707865, 0x3320646e, 0x79622d32, 0x6b206574],
+                     dtype=np.uint32)  # "expand 32-byte k"
+
+
+def _rotl(x: jax.Array, n: int) -> jax.Array:
+    return (x << np.uint32(n)) | (x >> np.uint32(32 - n))
+
+
+def _quarter(state, a, b, c, d):
+    """One quarter round on state column vectors (dict idx -> (N,) u32)."""
+    sa, sb, sc, sd = state[a], state[b], state[c], state[d]
+    sa = sa + sb
+    sd = _rotl(sd ^ sa, 16)
+    sc = sc + sd
+    sb = _rotl(sb ^ sc, 12)
+    sa = sa + sb
+    sd = _rotl(sd ^ sa, 8)
+    sc = sc + sd
+    sb = _rotl(sb ^ sc, 7)
+    state[a], state[b], state[c], state[d] = sa, sb, sc, sd
+
+
+def chacha20_block(key: jax.Array, nonce: jax.Array,
+                   counters: jax.Array) -> jax.Array:
+    """Keystream blocks.
+
+    key: (8,) u32; nonce: (3,) u32; counters: (N,) u32.
+    Returns (N, 16) u32 keystream.
+    """
+    N = counters.shape[0]
+    cols = []
+    for i in range(4):
+        cols.append(jnp.broadcast_to(jnp.asarray(CONSTANTS[i], U32), (N,)))
+    for i in range(8):
+        cols.append(jnp.broadcast_to(key[i].astype(U32), (N,)))
+    cols.append(counters.astype(U32))
+    for i in range(3):
+        cols.append(jnp.broadcast_to(nonce[i].astype(U32), (N,)))
+    state = list(cols)
+
+    for _ in range(10):  # 10 double rounds = 20 rounds
+        _quarter(state, 0, 4, 8, 12)
+        _quarter(state, 1, 5, 9, 13)
+        _quarter(state, 2, 6, 10, 14)
+        _quarter(state, 3, 7, 11, 15)
+        _quarter(state, 0, 5, 10, 15)
+        _quarter(state, 1, 6, 11, 12)
+        _quarter(state, 2, 7, 8, 13)
+        _quarter(state, 3, 4, 9, 14)
+
+    out = [s + c for s, c in zip(state, cols)]
+    return jnp.stack(out, axis=-1)  # (N, 16)
+
+
+def keystream(key: jax.Array, nonce: jax.Array, n_words: int,
+              counter0: int = 1) -> jax.Array:
+    """Flat keystream of n_words uint32 (padded up to whole blocks)."""
+    n_blocks = (n_words + 15) // 16
+    counters = counter0 + jnp.arange(n_blocks, dtype=U32)
+    ks = chacha20_block(key, nonce, counters).reshape(-1)
+    return ks[:n_words]
+
+
+def encrypt_words(key: jax.Array, nonce: jax.Array, words: jax.Array,
+                  counter0: int = 1) -> jax.Array:
+    """XOR a flat (N,) uint32 array with the keystream. Involutive."""
+    ks = keystream(key, nonce, words.shape[0], counter0)
+    return words ^ ks
+
+
+decrypt_words = encrypt_words  # XOR stream cipher is its own inverse

@@ -1,0 +1,45 @@
+"""Session keys per pipeline stage.
+
+As in the paper (§4): "we assume that attestation and key establishment was
+previously performed. As a result, keys safely reside within the enclave."
+Key material is derived deterministically from a root key + stage name so
+every worker of a stage (and its downstream router) agrees without a wire
+protocol; nonces are (stage_id, chunk_counter) pairs, never reused.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+@dataclass(frozen=True)
+class StageKey:
+    key: np.ndarray          # (8,) uint32 — ChaCha20 key
+    stage_id: int
+
+    def nonce(self, chunk_counter: int) -> np.ndarray:
+        # Nonce depends only on the chunk counter: edge keys are already
+        # unique per edge (so no cross-edge nonce reuse), and the fused
+        # enclave kernel re-encrypts under the *outbound* key with the same
+        # nonce — sender and receiver must agree on it without knowing each
+        # other's stage ids.
+        return np.array([0,
+                         chunk_counter & 0xFFFFFFFF,
+                         (chunk_counter >> 32) & 0xFFFFFFFF],
+                        dtype=np.uint32)
+
+
+def derive_stage_key(root: bytes, stage_name: str, stage_id: int) -> StageKey:
+    h = hashlib.sha256(root + b"|" + stage_name.encode()).digest()
+    key = np.frombuffer(h, dtype="<u4").copy()
+    return StageKey(key=key, stage_id=stage_id)
+
+
+def root_key_from_seed(seed: int) -> bytes:
+    return hashlib.sha256(f"repro-root-{seed}".encode()).digest()

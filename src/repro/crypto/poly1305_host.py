@@ -1,0 +1,32 @@
+"""Host-side Poly1305 (RFC 7539) with Python big ints.
+
+Used for *sealed storage* (checkpoints written to disk), where the MAC runs
+on the host CPU anyway and the 128-bit tag is worth the big-int cost.  The
+TPU data path uses the CW-MAC (cwmac.py) instead — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+P = (1 << 130) - 5
+
+
+def _le_bytes_to_int(b: bytes) -> int:
+    return int.from_bytes(b, "little")
+
+
+def poly1305(key32: bytes, msg: bytes) -> bytes:
+    assert len(key32) == 32
+    r = _le_bytes_to_int(key32[:16])
+    r &= 0x0FFFFFFC0FFFFFFC0FFFFFFC0FFFFFFF  # clamp
+    s = _le_bytes_to_int(key32[16:])
+    acc = 0
+    for i in range(0, len(msg), 16):
+        block = msg[i:i + 16]
+        n = _le_bytes_to_int(block + b"\x01")
+        acc = ((acc + n) * r) % P
+    acc = (acc + s) % (1 << 128)
+    return acc.to_bytes(16, "little")
+
+
+def poly1305_verify(key32: bytes, msg: bytes, tag: bytes) -> bool:
+    import hmac
+    return hmac.compare_digest(poly1305(key32, msg), tag)

@@ -1,0 +1,53 @@
+"""Synthetic datasets.
+
+``flight_records``: the paper's DelayedFlights workload (§5.2) — records of
+(carrier, delay_minutes, ...) packed as 16 uint32 words each (one ChaCha20
+block per record, so enclave ops are record-aligned).  The real dataset is
+28M rows / 2.73 GB; the generator is deterministic per seed and scales.
+
+``token_stream``: deterministic token shards for LM training examples —
+each shard optionally AEAD-sealed at rest (the secure input pipeline).
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+RECORD_WORDS = 16  # one cipher block per record
+CARRIER_WORD = 0
+DELAY_WORD = 1
+DISTANCE_WORD = 2
+
+
+def flight_records(n_records: int, num_carriers: int = 20,
+                   seed: int = 0) -> np.ndarray:
+    """(n_records, 16) uint32 packed records."""
+    rng = np.random.default_rng(seed)
+    rec = np.zeros((n_records, RECORD_WORDS), dtype=np.uint32)
+    rec[:, CARRIER_WORD] = rng.integers(0, num_carriers, n_records)
+    # delay minutes: mixture of on-time (<=15) and delayed (heavy tail)
+    delayed = rng.random(n_records) < 0.35
+    delay = np.where(delayed,
+                     rng.gamma(2.0, 30.0, n_records),
+                     rng.uniform(0, 15, n_records)).astype(np.uint32)
+    rec[:, DELAY_WORD] = delay
+    rec[:, DISTANCE_WORD] = rng.integers(100, 5000, n_records)
+    rec[:, 3] = rng.integers(0, 2 ** 31, n_records)  # opaque payload
+    return rec
+
+
+def flight_chunks(n_records: int, chunk_records: int, num_carriers: int = 20,
+                  seed: int = 0) -> Iterator[np.ndarray]:
+    data = flight_records(n_records, num_carriers, seed)
+    for i in range(0, n_records - chunk_records + 1, chunk_records):
+        yield data[i:i + chunk_records]
+
+
+def token_stream(vocab: int, seq_len: int, batch: int, n_batches: int,
+                 seed: int = 0) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Deterministic (tokens, labels) batches (labels = next token)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        toks = rng.integers(0, vocab, (batch, seq_len + 1), dtype=np.int32)
+        yield toks[:, :-1], toks[:, 1:]

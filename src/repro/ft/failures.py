@@ -1,0 +1,76 @@
+"""Failure handling: detection/simulation + checkpoint-restart recovery.
+
+On a real fleet, node failures surface as collective timeouts or device
+errors; the recovery primitive is identical either way: restore the last
+sealed checkpoint and continue (possibly on a *different* mesh — elastic
+restore, repro.ckpt).  This module provides the policy layer:
+
+* ``FailureInjector`` — deterministic fault schedule for tests/examples
+  (step -> kind), standing in for real device loss on CPU;
+* ``run_with_recovery`` — the supervisor loop: run the step function,
+  on failure restore from checkpoint and replay the data stream to the
+  restored step (streams are counter-addressed, so replay = fast-forward
+  of the chunk counter — the SecureStreams nonce discipline gives
+  exactly-once semantics for free).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+
+class SimulatedFailure(RuntimeError):
+    def __init__(self, kind: str, step: int):
+        super().__init__(f"simulated {kind} at step {step}")
+        self.kind = kind
+        self.step = step
+
+
+@dataclass
+class FailureInjector:
+    schedule: Dict[int, str] = field(default_factory=dict)  # step -> kind
+    fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        kind = self.schedule.get(step)
+        if kind and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(kind, step)
+
+
+@dataclass
+class RecoveryReport:
+    restarts: int = 0
+    failures: List[Tuple[int, str]] = field(default_factory=list)
+    replayed_steps: int = 0
+    final_step: int = -1
+
+
+def run_with_recovery(
+    *,
+    total_steps: int,
+    run_steps: Callable[[int, int], int],
+    # run_steps(start_step, end_step) -> last completed step; raises on fail
+    restore: Callable[[], int],
+    # restore() -> step to resume from (restores model state internally)
+    max_restarts: int = 8,
+) -> RecoveryReport:
+    """Supervisor loop: keep running until total_steps or restart budget."""
+    report = RecoveryReport()
+    step = restore()
+    while step < total_steps:
+        try:
+            step = run_steps(step, total_steps)
+        except Exception as e:  # noqa: BLE001 — any failure -> recover
+            report.restarts += 1
+            failed_at = getattr(e, "step", step)
+            report.failures.append((failed_at, repr(e)))
+            if report.restarts > max_restarts:
+                raise RuntimeError(
+                    f"restart budget exhausted after {report.restarts}") from e
+            resumed = restore()
+            report.replayed_steps += max(failed_at - resumed, 0)
+            step = resumed
+    report.final_step = step
+    return report

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: ChaCha20-CTR encrypt/decrypt over uint32 word blocks.
+
+Grid: one program per tile of `block_rows` cipher blocks; each block is 16
+uint32 words, so a tile is a (block_rows, 16) u32 VMEM buffer (block_rows=512
+=> 32 KiB in + 32 KiB out, comfortably inside VMEM with double buffering).
+The keystream is derived in-register from (key, nonce, counter) — the
+HBM->VMEM DMA moves only ciphertext, which is the paper's MEE boundary
+analogy (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.chacha20.common import keystream_vectors
+
+U32 = jnp.uint32
+
+
+def _chacha_kernel(key_ref, nonce_ref, ctr_ref, data_ref, out_ref, *,
+                   block_rows: int):
+    pid = pl.program_id(0)
+    key = [key_ref[0, i] for i in range(8)]
+    nonce = [nonce_ref[0, i] for i in range(3)]
+    base = ctr_ref[0, 0] + (pid * block_rows).astype(U32)
+    counters = base + jax.lax.broadcasted_iota(U32, (block_rows,), 0)
+    ks = keystream_vectors(key, nonce, counters)      # 16 x (rows,)
+    data = data_ref[...]                              # (rows, 16) u32
+    ks_mat = jnp.stack(ks, axis=-1)                   # (rows, 16)
+    out_ref[...] = data ^ ks_mat
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def chacha20_xor_blocks(key: jax.Array, nonce: jax.Array, counter0,
+                        data_blocks: jax.Array, *, block_rows: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """data_blocks: (N, 16) u32, N % block_rows == 0. Returns XORed blocks."""
+    N = data_blocks.shape[0]
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows,)
+    key2 = key.reshape(1, 8).astype(U32)
+    nonce2 = nonce.reshape(1, 3).astype(U32)
+    ctr = jnp.asarray(counter0, U32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_chacha_kernel, block_rows=block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(data_blocks.shape, U32),
+        interpret=interpret,
+    )(key2, nonce2, ctr, data_blocks)

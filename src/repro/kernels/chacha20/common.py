@@ -1,0 +1,61 @@
+"""ChaCha20 round function shared by the cipher and enclave-map kernels.
+
+Written in plain jnp ops on uint32 vectors so the same code runs inside a
+Pallas kernel body (VMEM tiles / vector registers on TPU) and in interpret
+mode on CPU.  The state is kept as 16 separate (rows,) vectors — on TPU each
+maps to (sublane, lane) tiles; the rounds are pure VPU element ops.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+CONSTANTS = (0x61707865, 0x3320646e, 0x79622d32, 0x6b206574)
+
+
+def _rotl(x, n: int):
+    return (x << np.uint32(n)) | (x >> np.uint32(32 - n))
+
+
+def _qr(s: List, a: int, b: int, c: int, d: int) -> None:
+    sa, sb, sc, sd = s[a], s[b], s[c], s[d]
+    sa = sa + sb
+    sd = _rotl(sd ^ sa, 16)
+    sc = sc + sd
+    sb = _rotl(sb ^ sc, 12)
+    sa = sa + sb
+    sd = _rotl(sd ^ sa, 8)
+    sc = sc + sd
+    sb = _rotl(sb ^ sc, 7)
+    s[a], s[b], s[c], s[d] = sa, sb, sc, sd
+
+
+def keystream_vectors(key_words, nonce_words, counters) -> List[jax.Array]:
+    """16 keystream vectors, each shaped like `counters` ((rows,) u32).
+
+    key_words: sequence of 8 u32 scalars; nonce_words: 3 u32 scalars.
+    """
+    shape = counters.shape
+    init = []
+    for c in CONSTANTS:
+        init.append(jnp.full(shape, c, U32))
+    for i in range(8):
+        init.append(jnp.full(shape, 1, U32) * key_words[i])
+    init.append(counters.astype(U32))
+    for i in range(3):
+        init.append(jnp.full(shape, 1, U32) * nonce_words[i])
+    s = list(init)
+    for _ in range(10):
+        _qr(s, 0, 4, 8, 12)
+        _qr(s, 1, 5, 9, 13)
+        _qr(s, 2, 6, 10, 14)
+        _qr(s, 3, 7, 11, 15)
+        _qr(s, 0, 5, 10, 15)
+        _qr(s, 1, 6, 11, 12)
+        _qr(s, 2, 7, 8, 13)
+        _qr(s, 3, 4, 9, 14)
+    return [a + b for a, b in zip(s, init)]

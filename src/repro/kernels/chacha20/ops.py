@@ -1,0 +1,31 @@
+"""Public op: ChaCha20-CTR over flat uint32 words (auto-padded to blocks).
+
+Chooses the Pallas kernel (interpret on CPU, compiled on TPU) and handles
+the flat-words <-> (N,16)-blocks framing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chacha20.chacha20 import chacha20_xor_blocks
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def encrypt_words(key, nonce, words, counter0: int = 1, *,
+                  block_rows: int = 512):
+    n = words.shape[0]
+    n_blocks = max((n + 15) // 16, 1)
+    pad_rows = (-n_blocks) % block_rows
+    total = (n_blocks + pad_rows) * 16
+    padded = jnp.pad(words, (0, total - n)).reshape(-1, 16)
+    out = chacha20_xor_blocks(key, nonce, counter0, padded,
+                              block_rows=block_rows,
+                              interpret=not _on_tpu())
+    return out.reshape(-1)[:n]
+
+
+decrypt_words = encrypt_words

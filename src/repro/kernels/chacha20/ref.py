@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the ChaCha20 Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import chacha20 as _c
+
+
+def chacha20_xor_blocks_ref(key, nonce, counter0, data_blocks):
+    N = data_blocks.shape[0]
+    counters = jnp.asarray(counter0, jnp.uint32) + jnp.arange(N, dtype=jnp.uint32)
+    ks = _c.chacha20_block(key, nonce, counters)   # (N, 16)
+    return data_blocks ^ ks

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: tiled Carter-Wegman MAC partials over GF(2^31-1).
+
+The MAC tag is Σ_i limb_i · r^(n-i) + s.  Factoring by tile t of TS limbs:
+
+    tag = Σ_t  r^(TS·(T-1-t)) · P_t,     P_t = Σ_j limb_{t,j} · r^(TS-j)
+
+Each grid program computes one P_t from a VMEM tile using a precomputed
+(TS,) powers vector (r^TS .. r^1); the per-tile scalar factors and the
+final fold are O(T) scalar mulmods done in jnp (ops.py).  Integer-only
+32-bit arithmetic throughout — see repro.crypto.cwmac for the field math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+P31 = np.uint32(0x7FFFFFFF)
+
+
+def _fold31(x):
+    x = (x & P31) + (x >> np.uint32(31))
+    return jnp.where(x >= P31, x - P31, x)
+
+
+def _addmod(a, b):
+    return _fold31(a + b)
+
+
+def _mulmod(a, b):
+    a1 = a >> np.uint32(16)
+    a0 = a & np.uint32(0xFFFF)
+    b1 = b >> np.uint32(16)
+    b0 = b & np.uint32(0xFFFF)
+    mid = a0 * b1 + a1 * b0
+    acc = _fold31(a0 * b0)
+    acc = _addmod(acc, _fold31((a1 * b1) * np.uint32(2)))
+    acc = _addmod(acc, _fold31(mid >> np.uint32(15)))
+    acc = _addmod(acc, _fold31((mid & np.uint32(0x7FFF)) << np.uint32(16)))
+    return acc
+
+
+def _mac_tile_kernel(limbs_ref, pows_ref, out_ref, *, tile: int):
+    terms = _mulmod(limbs_ref[...], pows_ref[...])   # (tile,) u32 < p
+    # log-depth tree add-mod within the tile
+    acc = terms
+    n = tile
+    while n > 1:
+        half = n // 2
+        acc = _addmod(acc[:half], acc[half:n])
+        n = half
+    out_ref[0] = acc[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def mac_partials(limbs: jax.Array, powers: jax.Array, *, tile: int = 4096,
+                 interpret: bool = True) -> jax.Array:
+    """limbs: (N,) u32 < p, N % tile == 0; powers: (tile,) = [r^TS..r^1].
+    Returns (N/tile,) per-tile partials P_t."""
+    N = limbs.shape[0]
+    assert N % tile == 0 and (tile & (tile - 1)) == 0, (N, tile)
+    grid = (N // tile,)
+    return pl.pallas_call(
+        functools.partial(_mac_tile_kernel, tile=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N // tile,), U32),
+        interpret=interpret,
+    )(limbs, powers)

@@ -1,0 +1,42 @@
+"""Public op: full CW-MAC via the tiled Pallas kernel + jnp combine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.cwmac import _to_limbs, addmod, mulmod, r_powers
+from repro.kernels.cwmac.cwmac import mac_partials
+
+U32 = jnp.uint32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mac(words: jax.Array, r: jax.Array, s: jax.Array, *,
+        tile: int = 4096) -> jax.Array:
+    """tag = (sum_i limb_i r^(n-i) + s) mod 2^31-1, kernel-tiled."""
+    limbs = _to_limbs(words)
+    n = limbs.shape[0]
+    pad = (-n) % tile
+    # zero limbs contribute 0 regardless of power: pad at the FRONT so the
+    # trailing (low-power) positions stay aligned with the message end.
+    limbs = jnp.concatenate([jnp.zeros((pad,), U32), limbs])
+    total = limbs.shape[0]
+    T = total // tile
+    pows_tile = r_powers(r, tile)                       # (tile,) = r^TS..r^1
+    partials = mac_partials(limbs, pows_tile, tile=tile,
+                            interpret=not _on_tpu())    # (T,)
+
+    # tile t contributes P_t * r^(TS*(T-1-t)); compute scalar factors by
+    # scanning with rTS = r^tile.
+    rTS = pows_tile[0]                                  # r^tile
+
+    def step(carry, p_t):
+        # process tiles in order: acc = acc * rTS + P_t  (Horner over tiles)
+        return addmod(mulmod(carry, rTS), p_t), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((), U32), partials)
+    return addmod(acc, s)

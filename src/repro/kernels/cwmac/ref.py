@@ -1,0 +1,3 @@
+"""Oracle for the CW-MAC kernel: repro.crypto.cwmac.mac (jnp) and the
+python-int Horner reference."""
+from repro.crypto.cwmac import mac as mac_ref, mac_reference  # noqa: F401

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: the ENCLAVE EXECUTOR — fused decrypt -> op -> encrypt.
+
+This is the paper's central mechanism transposed to TPU (DESIGN.md §2):
+the SGX enclave becomes a VMEM-resident kernel.  The HBM->VMEM DMA delivers
+*ciphertext*; the keystream XOR (decrypt), the user operator, and the
+re-encrypt all happen on VMEM tiles inside one kernel launch, so plaintext
+never exists in HBM — exactly how the MEE keeps plaintext inside the CPU
+package while DRAM sees ciphertext.
+
+The operator is selected statically (the "enclaved bytecode" is fixed at
+attestation time, like the paper's statically-linked Lua extensions):
+
+* ``identity``       — pure re-key (router-to-router transfer)
+* ``scale_f32``      — y = x * c          (map)
+* ``relu_f32``       — y = max(x, 0)      (map)
+* ``square_f32``     — y = x * x          (map)
+* ``threshold_mask`` — y = (x > c) ? x : 0  (filter as dense mask)
+* ``delay_filter_u32`` — the DelayedFlights predicate on packed records
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.chacha20.common import keystream_vectors
+
+U32 = jnp.uint32
+F32 = jnp.float32
+
+
+def _bitcast_f32(words_u32):
+    return jax.lax.bitcast_convert_type(words_u32, F32)
+
+
+def _bitcast_u32(x_f32):
+    return jax.lax.bitcast_convert_type(x_f32, U32)
+
+
+def _op_identity(x, c):
+    return x
+
+
+def _op_scale_f32(x, c):
+    return _bitcast_u32(_bitcast_f32(x) * c)
+
+
+def _op_relu_f32(x, c):
+    return _bitcast_u32(jnp.maximum(_bitcast_f32(x), 0.0))
+
+
+def _op_square_f32(x, c):
+    f = _bitcast_f32(x)
+    return _bitcast_u32(f * f)
+
+
+def _op_threshold_mask(x, c):
+    f = _bitcast_f32(x)
+    return _bitcast_u32(jnp.where(f > c, f, 0.0))
+
+
+def _op_delay_filter_u32(x, c):
+    # DelayedFlights: records are (rows,16) u32 with word 1 = delay minutes;
+    # keep the record (dense mask) iff delay > c.
+    delay = x[:, 1:2].astype(jnp.int32)
+    keep = delay > jnp.int32(c)
+    return jnp.where(keep, x, jnp.zeros_like(x))
+
+
+OPS: Dict[str, Callable] = {
+    "identity": _op_identity,
+    "scale_f32": _op_scale_f32,
+    "relu_f32": _op_relu_f32,
+    "square_f32": _op_square_f32,
+    "threshold_mask": _op_threshold_mask,
+    "delay_filter_u32": _op_delay_filter_u32,
+}
+
+
+def _enclave_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref, data_ref, out_ref,
+                    *, op: str, const: float, block_rows: int):
+    pid = pl.program_id(0)
+    base = ctr_ref[0, 0] + (pid * block_rows).astype(U32)
+    counters = base + jax.lax.broadcasted_iota(U32, (block_rows,), 0)
+    nonce = [nonce_ref[0, i] for i in range(3)]
+
+    # ---- decrypt (plaintext exists only from here ...)
+    ks_in = keystream_vectors([kin_ref[0, i] for i in range(8)], nonce,
+                              counters)
+    pt = data_ref[...] ^ jnp.stack(ks_in, axis=-1)
+    # ---- the enclaved operator
+    y = OPS[op](pt, const)
+    # ---- re-encrypt (... to here — never written to HBM)
+    ks_out = keystream_vectors([kout_ref[0, i] for i in range(8)], nonce,
+                               counters)
+    out_ref[...] = y ^ jnp.stack(ks_out, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "const", "block_rows",
+                                             "interpret"))
+def enclave_apply(key_in: jax.Array, key_out: jax.Array, nonce: jax.Array,
+                  counter0, data_blocks: jax.Array, *, op: str = "identity",
+                  const: float = 0.0, block_rows: int = 512,
+                  interpret: bool = True) -> jax.Array:
+    """Apply `op` to AEAD-CTR ciphertext blocks without exposing plaintext.
+
+    data_blocks: (N, 16) u32 ciphertext under (key_in, nonce, counter0).
+    Returns ciphertext of op(plaintext) under (key_out, nonce, counter0).
+    """
+    N = data_blocks.shape[0]
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_enclave_kernel, op=op, const=const,
+                          block_rows=block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(data_blocks.shape, U32),
+        interpret=interpret,
+    )(key_in.reshape(1, 8).astype(U32), key_out.reshape(1, 8).astype(U32),
+      nonce.reshape(1, 3).astype(U32), jnp.asarray(counter0, U32).reshape(1, 1),
+      data_blocks)

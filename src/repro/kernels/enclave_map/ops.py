@@ -1,0 +1,17 @@
+"""Public op wrapper for the enclave executor kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.enclave_map.enclave_map import enclave_apply, OPS  # noqa: F401
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def enclave_map(key_in, key_out, nonce, counter0, data_blocks, *, op,
+                const=0.0, block_rows: int = 512):
+    return enclave_apply(key_in, key_out, nonce, counter0, data_blocks,
+                         op=op, const=const, block_rows=block_rows,
+                         interpret=not _on_tpu())

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the enclave_map kernel: decrypt, op, re-encrypt —
+with plaintext as a visible intermediate (this is exactly the 'encrypted'
+mode of the paper's Fig. 6, vs. the kernel's 'enclave' mode)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.crypto import chacha20
+from repro.kernels.enclave_map.enclave_map import OPS
+
+
+def enclave_apply_ref(key_in, key_out, nonce, counter0, data_blocks, *,
+                      op="identity", const=0.0):
+    flat = data_blocks.reshape(-1)
+    pt = chacha20.decrypt_words(key_in, nonce, flat, counter0=int(counter0))
+    y = OPS[op](pt.reshape(-1, 16), const)
+    ct = chacha20.encrypt_words(key_out, nonce, y.reshape(-1),
+                                counter0=int(counter0))
+    return ct.reshape(data_blocks.shape)

@@ -1,0 +1,19 @@
+"""Oracle: naive full-materialization causal attention (B,H,S,D layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    s = jnp.einsum("BHqD,BHkD->BHqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("BHqk,BHkD->BHqD", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -----------------------------------------
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (SHAPES, ARCH_IDS, cell_supported, get_run_config)
+from repro.configs.base import RunConfig, ShardingConfig
+from repro.dist.meshctx import MeshContext
+from repro.launch import hloanalysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as model_api
+from repro.optim import make_optimizer, opt_state_shardings
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.steps import make_train_step
+
+# TPU v5e hardware constants (per chip) — see EXPERIMENTS.md §Roofline.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(run: RunConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step of the cell's kind (train/prefill/decode)."""
+    cfg, shape = run.model, run.shape
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": sds((B, S), i32)}
+    else:  # decode: one new token against a cache of S
+        out = {"tokens": sds((B, 1), i32)}
+    if cfg.frontend == "vision_patches" and shape.kind != "decode":
+        out["patches"] = sds((B, 256, cfg.frontend_dim), jnp.bfloat16)
+    elif cfg.frontend == "audio_frames" and shape.kind != "decode":
+        out["frames"] = sds((B, S, cfg.frontend_dim), jnp.bfloat16)
+    return out
+
+
+def _rules_for_shape(run: RunConfig) -> ShardingConfig:
+    """Per-shape sharding-rule adjustments (SP for long context, decode KV)."""
+    sc = run.sharding
+    if run.shape.name == "long_500k":
+        sc = sc.with_rule("kv_seq", ("data", "model"))
+        sc = sc.with_rule("seq", ("data",))
+    elif run.shape.kind == "decode":
+        sc = sc.with_rule("kv_seq", ("model",))
+    return sc
+
+
+def make_ctx(run: RunConfig, mesh) -> MeshContext:
+    sc = _rules_for_shape(run)
+    return MeshContext(mesh=mesh, rules=sc.lookup(),
+                       allow_uneven=sc.allow_uneven)
+
+
+def _batch_shardings(run: RunConfig, ctx: MeshContext, specs):
+    def shard(name, s):
+        if name in ("tokens", "labels") and s.shape[0] > 1:
+            logical = ["batch"] + [None] * (len(s.shape) - 1)
+        elif name in ("patches", "frames"):
+            logical = ["batch"] + [None] * (len(s.shape) - 1)
+        else:  # single-sequence long-context: shard seq
+            logical = [None, "seq"] if len(s.shape) == 2 else \
+                [None] * len(s.shape)
+        return ctx.sharding(logical, s.shape)
+    return {k: shard(k, v) for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(run: RunConfig, mesh) -> Tuple[Any, Any, MeshContext]:
+    """Returns (lowered, donated_memory_note, ctx)."""
+    ctx = make_ctx(run, mesh)
+    cfg = run.model
+    p_abs = model_api.abstract_params(cfg)
+    p_shard = model_api.param_shardings(cfg, ctx)
+    batch_abs = input_specs(run)
+    b_shard = _batch_shardings(run, ctx, batch_abs)
+
+    if run.shape.kind == "train":
+        step_fn, opt = make_train_step(run, ctx)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_shard = opt_state_shardings(opt, p_abs, p_shard, ctx)
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, b_shard, None),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = fn.lower(p_abs, o_abs, batch_abs,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+    elif run.shape.kind == "prefill":
+        step_fn = make_prefill_step(run, ctx, max_seq=run.shape.seq_len)
+        c_shard = model_api.cache_shardings(cfg, run.shape.global_batch,
+                                            run.shape.seq_len, ctx)
+        fn = jax.jit(step_fn, in_shardings=(p_shard, b_shard),
+                     out_shardings=(None, c_shard))
+        lowered = fn.lower(p_abs, batch_abs)
+    else:  # decode
+        step_fn = make_decode_step(run, ctx)
+        B, S = run.shape.global_batch, run.shape.seq_len
+        c_abs = model_api.abstract_cache(cfg, B, S)
+        c_shard = model_api.cache_shardings(cfg, B, S, ctx)
+        fn = jax.jit(step_fn,
+                     in_shardings=(p_shard, b_shard["tokens"], None, c_shard),
+                     out_shardings=(None, None, c_shard),
+                     donate_argnums=(3,))
+        lowered = fn.lower(p_abs, batch_abs["tokens"],
+                           jax.ShapeDtypeStruct((), jnp.int32), c_abs)
+    return lowered, None, ctx
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+def model_flops(run: RunConfig) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active params."""
+    n = run.model.active_param_count()
+    if run.shape.kind == "train":
+        return 6.0 * n * run.shape.tokens
+    if run.shape.kind == "prefill":
+        return 2.0 * n * run.shape.tokens
+    return 2.0 * n * run.shape.global_batch  # decode: one token per sequence
+
+
+def roofline(run: RunConfig, analysis: hloanalysis.Analysis,
+             nchips: int) -> Dict[str, Any]:
+    t_compute = analysis.flops / PEAK_FLOPS           # per-chip program
+    t_mem = analysis.bytes / HBM_BW
+    t_coll = analysis.collective_bytes / ICI_BW
+    terms = {"t_compute_s": t_compute, "t_mem_s": t_mem, "t_coll_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(run) / nchips                    # per-chip useful flops
+    return {
+        **terms,
+        "dominant": dom,
+        "hlo_flops_per_chip": analysis.flops,
+        "hlo_bytes_per_chip": analysis.bytes,
+        "collective_bytes_per_chip": analysis.collective_bytes,
+        "collective_by_kind": analysis.collective_by_kind,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": (mf / analysis.flops) if analysis.flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / max(
+            t_compute, t_mem, t_coll) if max(t_compute, t_mem, t_coll) else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             out_dir: str = OUT_DIR, force: bool = False,
+             save_hlo: bool = False,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    ok, reason = cell_supported(arch, shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "timestamp": time.time()}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        return rec
+
+    run = get_run_config(arch, shape, **(overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nchips = mesh.size
+    t0 = time.time()
+    try:
+        lowered, _, ctx = lower_cell(run, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        analysis = hloanalysis.analyze(hlo)
+        if save_hlo:
+            with open(path.replace(".json", ".hlo"), "w") as f:
+                f.write(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            nchips=nchips,
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                        + mem.temp_size_in_bytes
+                                        + mem.output_size_in_bytes
+                                        - mem.alias_size_in_bytes),
+            },
+            xla_cost={k: cost.get(k) for k in ("flops", "bytes accessed")
+                      if k in cost},
+            roofline=roofline(run, analysis, nchips),
+            collective_count=analysis.collective_count,
+        )
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def fmt_cell(rec: Dict[str, Any]) -> str:
+    if rec["status"] == "skipped":
+        return (f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:11s} "
+                f"SKIP ({rec['reason'][:50]}...)")
+    if rec["status"] == "error":
+        return (f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:11s} "
+                f"ERROR {rec['error'][:80]}")
+    r = rec["roofline"]
+    peak = rec["memory"]["peak_estimate_bytes"] / 1e9
+    return (f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:11s} ok "
+            f"compile={rec['compile_s']:7.1f}s mem={peak:7.2f}GB "
+            f"tc={r['t_compute_s']:.3e} tm={r['t_mem_s']:.3e} "
+            f"tx={r['t_coll_s']:.3e} dom={r['dominant'][2:]:8s} "
+            f"roofline={r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, out_dir=args.out,
+                               force=args.force, save_hlo=args.save_hlo)
+                print(fmt_cell(rec), flush=True)
+                n_err += rec["status"] == "error"
+    if n_err:
+        raise SystemExit(f"{n_err} cells failed")
+
+
+if __name__ == "__main__":
+    main()

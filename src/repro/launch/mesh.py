@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The target deployment mesh.
+
+    Single pod: 16 x 16 = 256 chips (TPU v5e pod), axes ("data", "model").
+    Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") —
+    the "pod" axis carries pure data parallelism with hierarchical gradient
+    reduction (reduce-scatter intra-pod, all-reduce across the DCN/pod axis).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int = 0) -> jax.sharding.Mesh:
+    """A small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,14 @@
+from repro.models.api import (  # noqa: F401
+    abstract_cache,
+    abstract_params,
+    cache_shardings,
+    cache_template,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shardings,
+    param_template,
+    prefill,
+)

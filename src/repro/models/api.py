@@ -1,0 +1,520 @@
+"""Unified model API over all assigned architecture families.
+
+Public surface (used by train/serve/launch):
+
+* ``param_template(cfg)``      -> nested dict of ParamSpec
+* ``abstract_params(cfg)``     -> ShapeDtypeStruct pytree (dry-run, no alloc)
+* ``init_params(cfg, key)``    -> real params (smoke tests / examples)
+* ``param_shardings(cfg, ctx)``-> NamedSharding pytree
+* ``forward(cfg, params, batch, ctx)``            -> (hidden, aux_loss)
+* ``loss_fn(cfg, params, batch, ctx)``            -> (loss, metrics)
+* ``cache_template(cfg, batch, max_seq)``; ``init_cache``; ``cache_shardings``
+* ``prefill(cfg, params, batch, ctx)``            -> (last_logits, cache)
+* ``decode_step(cfg, params, tokens, pos, cache, ctx)`` -> (logits, cache)
+
+Layer stacks are ``lax.scan``-ed (homogeneous HLO regardless of depth) with
+optional remat; heterogeneous families (xLSTM pairs, Zamba2 groups) scan
+their homogeneous sub-stacks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.meshctx import MeshContext
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import xlstm as XL
+from repro.models.layers import ParamSpec, Params
+
+Batch = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+
+def _norm(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def _mlp_template(cfg: ModelConfig) -> Dict[str, Any]:
+    t = {
+        "wu": ParamSpec((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+        "wd": ParamSpec((cfg.d_ff, cfg.d_model), ("mlp", "embed")),
+    }
+    if cfg.mlp_type == "swiglu":
+        t["wg"] = ParamSpec((cfg.d_model, cfg.d_ff), ("embed", "mlp"))
+    return t
+
+
+def _apply_mlp(p, h, cfg, ctx):
+    if cfg.mlp_type == "swiglu":
+        return L.swiglu(h, p["wg"], p["wu"], p["wd"], ctx)
+    u = jnp.einsum("...E,EF->...F", h, p["wu"])
+    u = jax.nn.gelu(u.astype(jnp.float32)).astype(h.dtype)
+    u = ctx.constrain(u, ("batch", "seq", "mlp")) if u.ndim == 3 else u
+    return jnp.einsum("...F,FE->...E", u, p["wd"])
+
+
+def _dense_layer_template(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": _norm(cfg.d_model),
+        "attn": L.attention_template(cfg),
+        "ln2": _norm(cfg.d_model),
+        "mlp": _mlp_template(cfg),
+    }
+
+
+def _moe_layer_template(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": _norm(cfg.d_model),
+        "attn": L.attention_template(cfg),
+        "ln2": _norm(cfg.d_model),
+        "moe": MOE.moe_template(cfg),
+    }
+
+
+def _xlstm_pair_template(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln_m": _norm(cfg.d_model),
+        "mlstm": XL.mlstm_template(cfg),
+        "ln_s": _norm(cfg.d_model),
+        "slstm": XL.slstm_template(cfg),
+    }
+
+
+def _mamba_layer_template(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln": _norm(cfg.d_model), "mamba": M2.mamba2_template(cfg)}
+
+
+def param_template(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_size
+    t: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": _norm(d),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamSpec((d, V), ("embed", "vocab"))
+    if cfg.frontend == "vision_patches":
+        t["frontend_proj"] = ParamSpec((cfg.frontend_dim, d), (None, "embed"))
+    elif cfg.frontend == "audio_frames":
+        t["frontend_proj"] = ParamSpec((cfg.frontend_dim, d), (None, "embed"))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        t["layers"] = L.stack_template(_dense_layer_template(cfg),
+                                       cfg.num_layers)
+    elif fam == "moe":
+        t["layers"] = L.stack_template(_moe_layer_template(cfg),
+                                       cfg.num_layers)
+    elif fam == "ssm":  # xLSTM
+        assert cfg.num_layers % 2 == 0
+        t["layers"] = L.stack_template(_xlstm_pair_template(cfg),
+                                       cfg.num_layers // 2)
+    elif fam == "hybrid":  # Zamba2
+        t["layers"] = L.stack_template(_mamba_layer_template(cfg),
+                                       cfg.num_layers)
+        t["shared_attn"] = {
+            "ln1": _norm(d),
+            "attn": L.attention_template(cfg),
+            "ln2": _norm(d),
+            "mlp": _mlp_template(cfg),
+        }
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return t
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return L.abstract_from_template(param_template(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    return L.init_from_template(param_template(cfg), key)
+
+
+def param_shardings(cfg: ModelConfig, ctx: MeshContext) -> Params:
+    return L.shardings_from_template(param_template(cfg), ctx)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (Zamba2) group geometry
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    """[(start, size, has_attn_after), ...] — shared attn after each full group."""
+    period = cfg.attn_every or cfg.num_layers
+    groups = []
+    i = 0
+    while i < cfg.num_layers:
+        size = min(period, cfg.num_layers - i)
+        groups.append((i, size, size == period))
+        i += size
+    return groups
+
+
+def num_shared_attn(cfg: ModelConfig) -> int:
+    return sum(1 for _, _, a in _hybrid_groups(cfg) if a)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(p, x, cfg, ctx, positions, remat_policy):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    x = x + L.mha(p["attn"], h, cfg, ctx, positions=positions)
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    x = x + _apply_mlp(p["mlp"], h, cfg, ctx)
+    # "seq_res": optional Megatron-style sequence-parallel residual stream —
+    # shards the (B,S,E) residual (and its remat stash) over the model axis.
+    return ctx.constrain(x, ("batch", "seq_res", "embed")), jnp.zeros((), jnp.float32)
+
+
+def _moe_block(p, x, cfg, ctx, positions, remat_policy):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    x = x + L.mha(p["attn"], h, cfg, ctx, positions=positions)
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    out, aux = MOE.moe_ffn(p["moe"], h, cfg, ctx)
+    x = x + out
+    return ctx.constrain(x, ("batch", "seq_res", "embed")), aux
+
+
+def _xlstm_pair_block(p, x, cfg, ctx, positions, remat_policy):
+    h = L.rms_norm(x, p["ln_m"], cfg.rms_eps)
+    x = x + XL.mlstm_forward(p["mlstm"], h, cfg, ctx)
+    h = L.rms_norm(x, p["ln_s"], cfg.rms_eps)
+    x = x + XL.slstm_forward(p["slstm"], h, cfg, ctx)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _mamba_block(p, x, cfg, ctx, positions, remat_policy):
+    h = L.rms_norm(x, p["ln"], cfg.rms_eps)
+    x = x + M2.mamba2_forward(p["mamba"], h, cfg, ctx)
+    return ctx.constrain(x, ("batch", "seq_res", "embed")), jnp.zeros((), jnp.float32)
+
+
+_BLOCK_FNS = {
+    "dense": _dense_block, "vlm": _dense_block, "audio": _dense_block,
+    "moe": _moe_block, "ssm": _xlstm_pair_block, "hybrid": _mamba_block,
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "selective":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"
+
+
+def _scan_stack(block_fn, stacked_params, x, remat: str):
+    ck = _maybe_remat(block_fn, remat)
+    x, auxs = jax.lax.scan(lambda c, p: ck(p, c), x, stacked_params)
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / frontend
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params: Params, batch: Batch,
+           ctx: MeshContext) -> jax.Array:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = ctx.constrain(x, ("batch", "seq", "embed"))
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        proj = jnp.einsum("BPF,FE->BPE", batch["patches"],
+                          params["frontend_proj"]).astype(x.dtype)
+        P = proj.shape[1]
+        x = jnp.concatenate([proj, x[:, P:]], axis=1)
+    elif cfg.frontend == "audio_frames" and "frames" in batch:
+        proj = jnp.einsum("BSF,FE->BSE", batch["frames"],
+                          params["frontend_proj"]).astype(x.dtype)
+        x = x + proj
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Batch, ctx: MeshContext,
+            *, remat: str = "full") -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (hidden (B,S,E), aux_loss)."""
+    x = _embed(cfg, params, batch, ctx)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    fam = cfg.family
+    block = functools.partial(_BLOCK_FNS[fam], cfg=cfg, ctx=ctx,
+                              positions=positions, remat_policy=remat)
+    bf = lambda p_l, xx: block(p_l, xx)
+
+    if fam == "hybrid":
+        aux = jnp.zeros((), jnp.float32)
+        for start, size, has_attn in _hybrid_groups(cfg):
+            sub = jax.tree.map(lambda a: a[start:start + size],
+                               params["layers"])
+            x, a = _scan_stack(lambda p, xx: bf(p, xx), sub, x, remat)
+            aux = aux + a
+            if has_attn:
+                x, _ = _dense_block(params["shared_attn"], x, cfg, ctx,
+                                    positions, remat)
+    else:
+        x, aux = _scan_stack(lambda p, xx: bf(p, xx), params["layers"], x,
+                             remat)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (streaming LM head: never materializes the full (T, V) logits)
+# ---------------------------------------------------------------------------
+
+
+def _lm_head_weight(cfg: ModelConfig, params: Params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T  # (E, V)
+    return params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Batch, ctx: MeshContext,
+            *, remat: str = "full", loss_chunks: int = 8,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    hidden, aux = forward(cfg, params, batch, ctx, remat=remat)
+    B, S, E = hidden.shape
+    W = _lm_head_weight(cfg, params)
+    labels = batch["labels"].reshape(B * S)
+    h = hidden.reshape(B * S, E)
+    nchunk = loss_chunks
+    while (B * S) % nchunk:
+        nchunk -= 1
+    hc = h.reshape(nchunk, (B * S) // nchunk, E)
+    lc = labels.reshape(nchunk, (B * S) // nchunk)
+
+    def chunk_loss(carry, xs):
+        hx, lx = xs
+        logits = jnp.einsum("TE,EV->TV", hx, W,
+                            preferred_element_type=jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[:, None].clip(0), axis=-1)[:, 0]
+        valid = (lx >= 0).astype(jnp.float32)
+        nll = jnp.sum((lse - gold) * valid)
+        ntok = jnp.sum(valid)
+        return (carry[0] + nll, carry[1] + ntok), None
+
+    body = _maybe_remat(lambda c, xs: chunk_loss(c, xs), remat)
+    (nll, ntok), _ = jax.lax.scan(lambda c, xs: body(c, xs),
+                                  (jnp.zeros((), jnp.float32),
+                                   jnp.zeros((), jnp.float32)),
+                                  (hc, lc))
+    loss = nll / jnp.maximum(ntok, 1.0)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "tokens": ntok}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def cache_template(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        return {"attn": L.stack_template(
+            L.attention_cache_template(cfg, batch, max_seq), cfg.num_layers)}
+    if fam == "ssm":
+        return {
+            "mlstm": L.stack_template(XL.mlstm_cache_template(cfg, batch),
+                                      cfg.num_layers // 2),
+            "slstm": L.stack_template(XL.slstm_cache_template(cfg, batch),
+                                      cfg.num_layers // 2),
+        }
+    if fam == "hybrid":
+        return {
+            "mamba": L.stack_template(M2.mamba2_cache_template(cfg, batch),
+                                      cfg.num_layers),
+            "attn": L.stack_template(
+                L.attention_cache_template(cfg, batch, max_seq),
+                num_shared_attn(cfg)),
+        }
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    return L.abstract_from_template(cache_template(cfg, batch, max_seq))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    return L.tree_map_specs(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        cache_template(cfg, batch, max_seq))
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_seq: int,
+                    ctx: MeshContext) -> Params:
+    return L.shardings_from_template(cache_template(cfg, batch, max_seq), ctx)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Batch, ctx: MeshContext,
+            *, max_seq: Optional[int] = None) -> Tuple[jax.Array, Params]:
+    """Run the full prompt, produce the cache + logits of the last position."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    x = _embed(cfg, params, batch, ctx)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    fam = cfg.family
+
+    def attn_prefill(p, xx, write_seq):
+        h = L.rms_norm(xx, p["ln1"], cfg.rms_eps)
+        out, kv = L.mha(p["attn"], h, cfg, ctx, positions=positions,
+                        return_kv=True, attn_impl="hier")
+        xx = xx + out
+        h = L.rms_norm(xx, p["ln2"], cfg.rms_eps)
+        if "mlp" in p:
+            xx = xx + _apply_mlp(p["mlp"], h, cfg, ctx)
+        else:
+            mo, _ = MOE.moe_ffn(p["moe"], h, cfg, ctx)
+            xx = xx + mo
+        k, v = kv
+        if write_seq < max_seq:
+            zk = jnp.zeros((B, max_seq, *k.shape[2:]), k.dtype)
+            k = jax.lax.dynamic_update_slice(zk, k, (0, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(jnp.zeros_like(zk), v,
+                                             (0, 0, 0, 0))
+        return ctx.constrain(xx, ("batch", "seq", "embed")), {"k": k, "v": v}
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def body(carry, p_l):
+            xx, cache_l = attn_prefill(p_l, carry, S)
+            return xx, cache_l
+        x, caches = jax.lax.scan(body, x, params["layers"])
+        cache = {"attn": caches}
+    elif fam == "ssm":
+        def body(carry, p_l):
+            xx = carry
+            h = L.rms_norm(xx, p_l["ln_m"], cfg.rms_eps)
+            ym, mstate = XL.mlstm_forward_with_state(p_l["mlstm"], h, cfg, ctx)
+            xx = xx + ym
+            h = L.rms_norm(xx, p_l["ln_s"], cfg.rms_eps)
+            ys, sstate = XL.slstm_forward_with_state(p_l["slstm"], h, cfg, ctx)
+            xx = xx + ys
+            return xx, (mstate, sstate)
+        x, (mstates, sstates) = jax.lax.scan(body, x, params["layers"])
+        cache = {"mlstm": mstates, "slstm": sstates}
+    elif fam == "hybrid":
+        mcaches, acaches = [], []
+        for start, size, has_attn in _hybrid_groups(cfg):
+            sub = jax.tree.map(lambda a: a[start:start + size],
+                               params["layers"])
+
+            def mbody(carry, p_l):
+                xx = carry
+                h = L.rms_norm(xx, p_l["ln"], cfg.rms_eps)
+                y, st = M2.mamba2_forward_with_state(p_l["mamba"], h, cfg, ctx)
+                return ctx.constrain(xx + y, ("batch", "seq", "embed")), st
+            x, st = jax.lax.scan(mbody, x, sub)
+            mcaches.append(st)
+            if has_attn:
+                x, ac = attn_prefill(params["shared_attn"], x, S)
+                acaches.append(ac)
+        cache = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *mcaches),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *acaches),
+        }
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    last = x[:, -1]
+    logits = jnp.einsum("BE,EV->BV", last, _lm_head_weight(cfg, params),
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                pos: jax.Array, cache: Params,
+                ctx: MeshContext) -> Tuple[jax.Array, Params]:
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (cache fill)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.constrain(x, ("batch", None, "embed"))
+    fam = cfg.family
+
+    def attn_decode(p, xx, cache_l):
+        h = L.rms_norm(xx, p["ln1"], cfg.rms_eps)
+        out, new_kv = L.mha_decode(p["attn"], h, cache_l, cfg, ctx, pos=pos)
+        xx = xx + out
+        h = L.rms_norm(xx, p["ln2"], cfg.rms_eps)
+        if "mlp" in p:
+            xx = xx + _apply_mlp(p["mlp"], h, cfg, ctx)
+        else:
+            mo, _ = MOE.moe_ffn(p["moe"], h, cfg, ctx)
+            xx = xx + mo
+        return xx, new_kv
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def body(carry, xs):
+            p_l, cache_l = xs
+            xx, new_kv = attn_decode(p_l, carry, cache_l)
+            return xx, new_kv
+        x, new_attn = jax.lax.scan(body, x, (params["layers"], cache["attn"]))
+        new_cache = {"attn": new_attn}
+    elif fam == "ssm":
+        def body(carry, xs):
+            p_l, (mc, sc) = xs
+            xx = carry
+            h = L.rms_norm(xx, p_l["ln_m"], cfg.rms_eps)
+            y, mc2 = XL.mlstm_decode(p_l["mlstm"], h, mc, cfg, ctx)
+            xx = xx + y
+            h = L.rms_norm(xx, p_l["ln_s"], cfg.rms_eps)
+            y, sc2 = XL.slstm_decode(p_l["slstm"], h, sc, cfg, ctx)
+            return xx + y, (mc2, sc2)
+        x, (nm, ns) = jax.lax.scan(body, x,
+                                   (params["layers"],
+                                    (cache["mlstm"], cache["slstm"])))
+        new_cache = {"mlstm": nm, "slstm": ns}
+    elif fam == "hybrid":
+        new_m, new_a = [], []
+        ai = 0
+        for start, size, has_attn in _hybrid_groups(cfg):
+            sub = jax.tree.map(lambda a: a[start:start + size],
+                               params["layers"])
+            subc = jax.tree.map(lambda a: a[start:start + size],
+                                cache["mamba"])
+
+            def mbody(carry, xs):
+                p_l, c_l = xs
+                xx = carry
+                h = L.rms_norm(xx, p_l["ln"], cfg.rms_eps)
+                y, c2 = M2.mamba2_decode(p_l["mamba"], h, c_l, cfg, ctx)
+                return xx + y, c2
+            x, nc = jax.lax.scan(mbody, x, (sub, subc))
+            new_m.append(nc)
+            if has_attn:
+                ac = jax.tree.map(lambda a: a[ai], cache["attn"])
+                x, nac = attn_decode(params["shared_attn"], x, ac)
+                new_a.append(nac)
+                ai += 1
+        new_cache = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_m),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_a),
+        }
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("BSE,EV->BSV", x, _lm_head_weight(cfg, params),
+                        preferred_element_type=jnp.float32)
+    return logits[:, -1], new_cache

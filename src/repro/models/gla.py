@@ -1,0 +1,140 @@
+"""Chunked gated linear attention — the shared recurrence engine.
+
+Both Mamba2's SSD and xLSTM's mLSTM are instances of the same per-head
+recurrence over matrix state ``S`` (and optional normalizer ``n``)::
+
+    S_t = exp(log_f_t) * S_{t-1} + i_t * k_t v_t^T        S: (Dk, Dv)
+    n_t = exp(log_f_t) * n_{t-1} + i_t * k_t              n: (Dk,)
+    y_t = q_t^T S_t            [ / max(|q_t^T n_t|, 1)    if normalized ]
+
+The chunkwise-parallel form (chunk length Q) computes an intra-chunk
+"attention" term with a decay mask plus an inter-chunk state carry, giving
+O(S·Q) work and O(S) memory — this is what makes the 500k-token shapes
+feasible and is the sub-quadratic path referenced in DESIGN.md §4.
+All state math in fp32 (the TPU analogue of the paper's "keep the working
+set inside the trusted fast memory": state lives in registers/VMEM).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_BIG = -1e30
+_f32 = jnp.float32
+
+
+def chunked_gla(
+    q: jax.Array,        # (B, S, H, Dk)
+    k: jax.Array,        # (B, S, H, Dk)
+    v: jax.Array,        # (B, S, H, Dv)
+    log_f: jax.Array,    # (B, S, H)   per-step log decay (<= 0)
+    i_gate: jax.Array,   # (B, S, H)   input gate (>= 0)
+    *,
+    chunk: int = 256,
+    normalize: bool = False,
+    init_state: Optional[Tuple[jax.Array, jax.Array]] = None,
+    return_state: bool = False,
+):
+    """Returns y: (B, S, H, Dv) [and final (S, n) state if requested]."""
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    qc = q.reshape(B, nc, chunk, H, Dk).swapaxes(0, 1)
+    kc = k.reshape(B, nc, chunk, H, Dk).swapaxes(0, 1)
+    vc = v.reshape(B, nc, chunk, H, Dv).swapaxes(0, 1)
+    fc = log_f.reshape(B, nc, chunk, H).swapaxes(0, 1).astype(_f32)
+    ic = i_gate.reshape(B, nc, chunk, H).swapaxes(0, 1).astype(_f32)
+
+    if init_state is None:
+        S0 = jnp.zeros((B, H, Dk, Dv), _f32)
+        n0 = jnp.zeros((B, H, Dk), _f32)
+    else:
+        S0, n0 = init_state
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def block(carry, xs):
+        Sp, np_ = carry                          # (B,H,Dk,Dv), (B,H,Dk)
+        qb, kb, vb, fb, ib = xs                  # (B,Q,H,*)
+        cum = jnp.cumsum(fb, axis=1)             # (B,Q,H), non-increasing
+        tot = cum[:, -1, :]                      # (B,H)
+        qf, kf, vf = (t.astype(_f32) for t in (qb, kb, vb))
+
+        # intra-chunk: A[t,s] = exp(cum_t - cum_s) * i_s * (q_t . k_s), s<=t
+        scores = jnp.einsum("BtHD,BsHD->BHts", qf, kf)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]        # (B,t,s,H)
+        decay = jnp.where(tri[None, :, :, None], decay, NEG_BIG)
+        gate = jnp.exp(decay) * ib[:, None, :, :]              # (B,t,s,H)
+        gate = gate.transpose(0, 3, 1, 2)                      # (B,H,t,s)
+        A = scores * gate
+        y = jnp.einsum("BHts,BsHD->BtHD", A, vf)
+
+        # inter-chunk: contribution of the carried state
+        qdec = qf * jnp.exp(cum)[..., None]                    # (B,Q,H,Dk)
+        y = y + jnp.einsum("BtHK,BHKV->BtHV", qdec, Sp)
+
+        if normalize:
+            nk = jnp.einsum("BHts,BsHK->BtHK", gate, kf)
+            n_t = nk + jnp.einsum("BtH,BHK->BtHK", jnp.exp(cum), np_)
+            denom = jnp.abs(jnp.einsum("BtHK,BtHK->BtH", qf, n_t))
+            y = y / jnp.maximum(denom, 1.0)[..., None]
+
+        # state carry to the next chunk
+        kscale = (jnp.exp(tot[:, None, :] - cum) * ib)[..., None]  # (B,Q,H,1)
+        ks = kf * kscale
+        S_new = jnp.exp(tot)[:, :, None, None] * Sp + jnp.einsum(
+            "BsHK,BsHV->BHKV", ks, vf)
+        n_new = jnp.exp(tot)[..., None] * np_ + jnp.einsum("BsHK->BHK", ks)
+        return (S_new, n_new), y
+
+    (Sf, nf), ys = jax.lax.scan(block, (S0, n0), (qc, kc, vc, fc, ic))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, Dv)
+    if return_state:
+        return y, (Sf, nf)
+    return y
+
+
+def gla_decode_step(
+    q: jax.Array,        # (B, H, Dk)
+    k: jax.Array,
+    v: jax.Array,        # (B, H, Dv)
+    log_f: jax.Array,    # (B, H)
+    i_gate: jax.Array,   # (B, H)
+    state: Tuple[jax.Array, jax.Array],   # S: (B,H,Dk,Dv), n: (B,H,Dk)
+    *,
+    normalize: bool = False,
+):
+    """Single-token recurrent update; O(1) per token."""
+    Sp, np_ = state
+    f = jnp.exp(log_f.astype(_f32))[..., None]                 # (B,H,1)
+    i = i_gate.astype(_f32)[..., None]                         # (B,H,1)
+    qf, kf, vf = (t.astype(_f32) for t in (q, k, v))
+    S_new = f[..., None] * Sp + (i * kf)[..., None] * vf[..., None, :]
+    n_new = f * np_ + i * kf
+    y = jnp.einsum("BHK,BHKV->BHV", qf, S_new)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("BHK,BHK->BH", qf, n_new))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return y, (S_new, n_new)
+
+
+def gla_reference(q, k, v, log_f, i_gate, *, normalize=False):
+    """Pure per-step oracle (sequential scan) for testing chunked_gla."""
+    B, S, H, Dk = q.shape
+
+    def step(state, xs):
+        qs, ks, vs, fs, is_ = xs
+        y, state = gla_decode_step(qs, ks, vs, fs, is_, state,
+                                   normalize=normalize)
+        return state, y
+
+    S0 = jnp.zeros((B, H, Dk, v.shape[-1]), _f32)
+    n0 = jnp.zeros((B, H, Dk), _f32)
+    xs = tuple(x.swapaxes(0, 1) for x in (q, k, v, log_f, i_gate))
+    _, ys = jax.lax.scan(step, (S0, n0), xs)
+    return ys.swapaxes(0, 1)

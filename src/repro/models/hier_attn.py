@@ -1,0 +1,68 @@
+"""Hierarchical causal attention: recursive halving to eliminate the
+masked-FLOP waste of scan-based causal attention.
+
+A causal attention over S positions decomposes as::
+
+    [ A  0 ]   A = causal attention over the first half
+    [ B  C ]   C = causal attention over the second half
+               B = *dense* (unmasked) attention of the second-half queries
+                   over the first-half keys — no wasted lanes.
+
+Recursing log2(S/base) times, every FLOP except the tiny base-case
+diagonal blocks is dense: HLO compute drops from S^2 to ~S^2/2 (the true
+causal cost), with **static shapes at every level** — something the
+lax.scan-over-kv-chunks formulation cannot do (it must visit every chunk
+and mask).  Each dense rectangle runs through the flash forward (online
+softmax, memory-linear) and partial results merge by log-sum-exp.
+
+Used for inference paths (prefill); training keeps the custom-VJP flash.
+See EXPERIMENTS.md §Perf for the measured FLOP reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flash import _flash_fwd_impl
+
+_f32 = jnp.float32
+
+
+def _merge(o1, lse1, o2, lse2):
+    """Merge two partial attention results over the same queries.
+
+    o_i: (B,S,H,D) normalized partial outputs; lse_i: (B,S,H) log-sum-exp.
+    """
+    m = jnp.maximum(lse1, lse2)
+    w1 = jnp.exp(lse1 - m)[..., None]
+    w2 = jnp.exp(lse2 - m)[..., None]
+    o = (o1.astype(_f32) * w1 + o2.astype(_f32) * w2) / (w1 + w2)
+    lse = m + jnp.log(jnp.exp(lse1 - m) + jnp.exp(lse2 - m))
+    return o.astype(o1.dtype), lse
+
+
+def hier_causal_attention(q, k, v, *, base: int = 1024, q_chunk: int = 512,
+                          kv_chunk: int = 1024):
+    """q,k,v: (B,S,H,D), kv expanded to H heads. Returns (B,S,H,D)."""
+    out, _ = _rec(q, k, v, base, q_chunk, kv_chunk)
+    return out
+
+
+def _rec(q, k, v, base, q_chunk, kv_chunk):
+    S = q.shape[1]
+    if S <= base:
+        return _flash_fwd_impl(q, k, v, True, min(q_chunk, S),
+                               min(kv_chunk, S))
+    half = S // 2
+    o1, lse1 = _rec(q[:, :half], k[:, :half], v[:, :half], base, q_chunk,
+                    kv_chunk)
+    o2, lse2 = _rec(q[:, half:], k[:, half:], v[:, half:], base, q_chunk,
+                    kv_chunk)
+    # dense rectangle: second-half queries attend ALL first-half keys
+    oc, lsec = _flash_fwd_impl(q[:, half:], k[:, :half], v[:, :half], False,
+                               min(q_chunk, half), min(kv_chunk, half))
+    o2m, _ = _merge(o2, lse2, oc, lsec)
+    out = jnp.concatenate([o1, o2m], axis=1)
+    lse = jnp.concatenate(
+        [lse1, jnp.logaddexp(lse2, lsec)], axis=1)
+    return out, lse

@@ -1,0 +1,319 @@
+"""Shared neural-net components: param templates, norms, RoPE, attention.
+
+Conventions
+-----------
+* Params are nested dicts of arrays; their *templates* are nested dicts of
+  :class:`ParamSpec` carrying shape + logical axis names.  The template is
+  the single source of truth: real init, abstract (dry-run) params, and
+  shardings all derive from it.
+* Activations are bf16; softmax / norms / recurrent states accumulate fp32.
+* einsum letters: B batch, S/T seq, H q-heads, K kv-heads, D head_dim,
+  E d_model, F d_ff, X experts, C capacity, V vocab, N state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.meshctx import MeshContext
+
+Params = Any  # nested dict pytree
+
+
+# ---------------------------------------------------------------------------
+# Param templates
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: Optional[float] = None  # stddev override; default 1/sqrt(fan_in)
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+    def initialize(self, key: jax.Array) -> jax.Array:
+        dt = jnp.dtype(self.dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dt)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dt)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        std = self.scale if self.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dt)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], template: Params) -> Params:
+    return jax.tree.map(fn, template, is_leaf=is_spec)
+
+
+def abstract_from_template(template: Params) -> Params:
+    return tree_map_specs(lambda s: s.abstract(), template)
+
+
+def init_from_template(template: Params, key: jax.Array) -> Params:
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [spec.initialize(k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shardings_from_template(template: Params, ctx: MeshContext) -> Params:
+    return tree_map_specs(lambda s: ctx.sharding(s.logical, s.shape), template)
+
+
+def stacked(spec: ParamSpec, n: int, axis_name: Optional[str] = "layers") -> ParamSpec:
+    """Prepend a scan (layers) dimension to a spec."""
+    return dataclasses.replace(
+        spec, shape=(n, *spec.shape), logical=(axis_name, *spec.logical)
+    )
+
+
+def stack_template(template: Params, n: int) -> Params:
+    return tree_map_specs(lambda s: stacked(s, n), template)
+
+
+# ---------------------------------------------------------------------------
+# Basic ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, ctx: MeshContext) -> jax.Array:
+    g = jnp.einsum("...E,EF->...F", x, w_gate)
+    u = jnp.einsum("...E,EF->...F", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = ctx.constrain(h, ("batch", "seq", "mlp")) if h.ndim == 3 else h
+    return jnp.einsum("...F,FE->...E", h, w_down)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (D/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked online-softmax => memory-linear in seq)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attention_template(cfg, prefix_dim: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d, h, k, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    t: Dict[str, ParamSpec] = {
+        "wq": ParamSpec((d, h * dh), ("embed", "heads")),
+        "wk": ParamSpec((d, k * dh), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, k * dh), ("embed", "kv_heads")),
+        "wo": ParamSpec((h * dh, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ParamSpec((h * dh,), ("heads",), init="zeros")
+        t["bk"] = ParamSpec((k * dh,), ("kv_heads",), init="zeros")
+        t["bv"] = ParamSpec((k * dh,), ("kv_heads",), init="zeros")
+    return t
+
+
+def _project_qkv(p: Params, x: jax.Array, cfg, ctx: MeshContext,
+                 positions: jax.Array):
+    B, S, _ = x.shape
+    h, k, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("BSE,EH->BSH", x, p["wq"])
+    kk = jnp.einsum("BSE,EK->BSK", x, p["wk"])
+    v = jnp.einsum("BSE,EK->BSK", x, p["wv"])
+    if cfg.qkv_bias:
+        q, kk, v = q + p["bq"], kk + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h, dh)
+    kk = kk.reshape(B, S, k, dh)
+    v = v.reshape(B, S, k, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    kk = apply_rope(kk, positions, cfg.rope_theta)
+    q = ctx.constrain(q, ("batch", "seq", "heads", None))
+    return q, kk, v
+
+
+def repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """(B,S,K,D) -> (B,S,K*groups,D) by repeating each kv head `groups` times."""
+    if groups == 1:
+        return x
+    B, S, K, D = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, K, groups, D)).reshape(
+        B, S, K * groups, D)
+
+
+def chunked_attention(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Skv, H, D)  (kv already repeated to H heads)
+    v: jax.Array,          # (B, Skv, H, D)
+    *,
+    causal: bool,
+    q_offset: Any = 0,     # absolute position of q[0] (int or traced scalar)
+    kv_valid: Optional[Any] = None,  # #valid kv positions (decode w/ cache)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, memory O(S) instead of O(S^2).
+
+    Both loops are `lax.scan`s so the HLO stays compact under scan-over-layers.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = max(Sq // q_chunk, 1)
+    nkv = max(Skv // kv_chunk, 1)
+    # Fall back to unchunked remainder handling: require divisibility.
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+
+    scale = 1.0 / np.sqrt(D)
+    q = q.reshape(B, nq, q_chunk, H, D).swapaxes(0, 1)    # (nq,B,qc,H,D)
+    kr = k.reshape(B, nkv, kv_chunk, H, D).swapaxes(0, 1)  # (nkv,B,kc,H,D)
+    vr = v.reshape(B, nkv, kv_chunk, H, D).swapaxes(0, 1)
+
+    kv_pos = (jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk))
+
+    def q_block(_, qi):
+        qb, iq = qi                                        # (B,qc,H,D), idx
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, kvj):
+            m, l, acc = carry
+            kb, vb, pos = kvj                              # (B,kc,H,D), (kc,)
+            s = jnp.einsum("BqHD,BkHD->BHqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask = mask & (pos[None, :] <= q_pos[:, None])
+            if kv_valid is not None:
+                mask = mask & (pos[None, :] < kv_valid)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))         # (B,H,q)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "BHqk,BkHD->BHqD", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, q_chunk), jnp.float32),
+            jnp.zeros((B, H, q_chunk, D), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, (kr, vr, kv_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,H,q,D)
+        return None, out.swapaxes(1, 2)                    # (B,q,H,D)
+
+    _, outs = jax.lax.scan(q_block, None, (q, jnp.arange(nq)))  # (nq,B,qc,H,D)
+    out = outs.swapaxes(0, 1).reshape(B, Sq, H, D)
+    return out
+
+
+def mha(p: Params, x: jax.Array, cfg, ctx: MeshContext, *,
+        positions: jax.Array, q_chunk: int = 512, kv_chunk: int = 1024,
+        attn_impl: str = "flash", return_kv: bool = False):
+    """Full (training / prefill) causal self-attention."""
+    B, S, _ = x.shape
+    groups = cfg.num_heads // cfg.num_kv_heads
+    q, k, v = _project_qkv(p, x, cfg, ctx, positions)
+    kv = (k, v)
+    k = repeat_kv(k, groups)
+    v = repeat_kv(v, groups)
+    k = ctx.constrain(k, ("batch", "seq", "heads", None))
+    v = ctx.constrain(v, ("batch", "seq", "heads", None))
+    if attn_impl == "pallas_flash":
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=True)
+    elif attn_impl == "chunked":  # scan-autodiff reference (memory-hungry bwd)
+        out = chunked_attention(q, k, v, causal=True,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+    elif attn_impl == "hier":  # inference: recursive-halving causal (~S^2/2)
+        from repro.models.hier_attn import hier_causal_attention
+        out = hier_causal_attention(q, k, v, q_chunk=q_chunk,
+                                    kv_chunk=kv_chunk)
+    else:  # "flash": custom-VJP online-softmax (default)
+        from repro.models.flash import flash_attention
+        out = flash_attention(q, k, v, True, q_chunk, kv_chunk)
+    out = ctx.constrain(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("BSX,XE->BSE", out.reshape(B, S, -1).astype(x.dtype),
+                   p["wo"])
+    if return_kv:
+        return y, kv
+    return y
+
+
+def mha_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array], cfg,
+               ctx: MeshContext, *, pos: jax.Array
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode with a KV cache (grouped einsum — KV is *not*
+    repeated to H heads, so cache reads stay at the GQA byte count).
+
+    cache: {"k": (B, Smax, K, D), "v": (B, Smax, K, D)}; `pos` (scalar) is the
+    index of the new token (== number of valid cache entries before update).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    K, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    Dh = cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, ctx, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    Smax = ck.shape[1]
+    qg = q.reshape(B, K, G, Dh)                       # (B,K,G,D) single token
+    s = jnp.einsum("BKGD,BSKD->BKGS", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / np.sqrt(Dh)
+    valid = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("BKGS,BSKD->BKGD", w.astype(cv.dtype), cv)
+    y = jnp.einsum("BSX,XE->BSE",
+                   out.reshape(B, 1, K * G * Dh).astype(x.dtype), p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def attention_cache_template(cfg, batch: int, max_seq: int,
+                             dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
+    k, dh = cfg.num_kv_heads, cfg.head_dim
+    spec = ParamSpec((batch, max_seq, k, dh),
+                     ("batch", "kv_seq", "kv_heads", None),
+                     init="zeros", dtype=dtype)
+    return {"k": spec, "v": spec}

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) block, built on the shared chunked-GLA engine.
+
+The SSD recurrence ``h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T`` with scalar
+per-head ``A`` maps onto :func:`repro.models.gla.chunked_gla` with
+``q=C, k=B, v=x, log_f = -exp(A_log)·dt, i = dt`` (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.meshctx import MeshContext
+from repro.models.gla import chunked_gla, gla_decode_step
+from repro.models.layers import ParamSpec, Params, rms_norm
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.headdim
+    return d_inner, nheads, ssm.state_dim, ssm.conv_width
+
+
+def mamba2_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, nheads, N, W = _dims(cfg)
+    return {
+        "in_proj_z": ParamSpec((d, d_inner), ("embed", "mlp")),
+        "in_proj_x": ParamSpec((d, d_inner), ("embed", "mlp")),
+        "in_proj_B": ParamSpec((d, N), ("embed", None)),
+        "in_proj_C": ParamSpec((d, N), ("embed", None)),
+        "in_proj_dt": ParamSpec((d, nheads), ("embed", "heads")),
+        "conv_x": ParamSpec((W, d_inner), (None, "mlp"), init="normal", scale=0.5),
+        "conv_B": ParamSpec((W, N), (None, None), init="normal", scale=0.5),
+        "conv_C": ParamSpec((W, N), (None, None), init="normal", scale=0.5),
+        "A_log": ParamSpec((nheads,), ("heads",), init="zeros", dtype="float32"),
+        "D": ParamSpec((nheads,), ("heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamSpec((nheads,), ("heads",), init="zeros", dtype="float32"),
+        "norm_inner": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv as a sum of shifts. x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(W):
+        out = out + pad[:, j:j + S].astype(jnp.float32) * w[j].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def _conv_step(state: jax.Array, xt: jax.Array, w: jax.Array):
+    """state: (B, W-1, C) previous inputs; xt: (B, C). Returns (out, state)."""
+    W = w.shape[0]
+    window = jnp.concatenate([state, xt[:, None]], axis=1)      # (B,W,C)
+    out = jnp.einsum("BWC,WC->BC", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out).astype(xt.dtype), window[:, 1:]
+
+
+def _gates(p: Params, dt_pre: jax.Array):
+    """dt_pre: (..., H) -> (log_f, i) both (..., H) fp32."""
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                    # (H,) < 0
+    return dt * A, dt
+
+
+def _mamba2_core(p: Params, x: jax.Array, cfg: ModelConfig, ctx: MeshContext,
+                 *, chunk: int = 0, with_state: bool = False):
+    B, S, _ = x.shape
+    d_inner, nheads, N, W = _dims(cfg)
+    hd = cfg.ssm.headdim
+    chunk = chunk or cfg.ssm.chunk_size
+
+    z = jnp.einsum("BSE,EI->BSI", x, p["in_proj_z"])
+    pre_x = jnp.einsum("BSE,EI->BSI", x, p["in_proj_x"])
+    pre_B = jnp.einsum("BSE,EN->BSN", x, p["in_proj_B"])
+    pre_C = jnp.einsum("BSE,EN->BSN", x, p["in_proj_C"])
+    xs = _causal_conv(pre_x, p["conv_x"])
+    Bm = _causal_conv(pre_B, p["conv_B"])
+    Cm = _causal_conv(pre_C, p["conv_C"])
+    log_f, i_gate = _gates(p, jnp.einsum("BSE,EH->BSH", x, p["in_proj_dt"]))
+
+    v = xs.reshape(B, S, nheads, hd)
+    v = ctx.constrain(v, ("batch", "seq", "heads", None))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, nheads, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, nheads, N))
+    res = chunked_gla(q, k, v, log_f, i_gate, chunk=min(chunk, S),
+                      return_state=with_state)
+    y, state = res if with_state else (res, None)
+    y = y + p["D"][None, None, :, None] * v.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_inner"], cfg.rms_eps)
+    out = jnp.einsum("BSI,IE->BSE", y, p["out_proj"])
+    if not with_state:
+        return out
+    cache = {
+        "conv_x": pre_x[:, S - (W - 1):],
+        "conv_B": pre_B[:, S - (W - 1):],
+        "conv_C": pre_C[:, S - (W - 1):],
+        "ssm": state[0],
+        "ssm_n": state[1],
+    }
+    return out, cache
+
+
+def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig, ctx: MeshContext,
+                   *, chunk: int = 0) -> jax.Array:
+    """x: (B, S, E) -> (B, S, E)."""
+    return _mamba2_core(p, x, cfg, ctx, chunk=chunk, with_state=False)
+
+
+def mamba2_forward_with_state(p: Params, x: jax.Array, cfg: ModelConfig,
+                              ctx: MeshContext, *, chunk: int = 0):
+    """Prefill variant: also returns the decode cache."""
+    return _mamba2_core(p, x, cfg, ctx, chunk=chunk, with_state=True)
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent, O(1)/token)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_cache_template(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    d_inner, nheads, N, W = _dims(cfg)
+    return {
+        "conv_x": ParamSpec((batch, W - 1, d_inner), ("batch", None, "mlp"),
+                            init="zeros"),
+        "conv_B": ParamSpec((batch, W - 1, N), ("batch", None, None),
+                            init="zeros"),
+        "conv_C": ParamSpec((batch, W - 1, N), ("batch", None, None),
+                            init="zeros"),
+        "ssm": ParamSpec((batch, nheads, N, cfg.ssm.headdim),
+                         ("batch", "heads", None, None), init="zeros",
+                         dtype="float32"),
+        "ssm_n": ParamSpec((batch, nheads, N), ("batch", "heads", None),
+                           init="zeros", dtype="float32"),
+    }
+
+
+def mamba2_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                  cfg: ModelConfig, ctx: MeshContext):
+    """x: (B, 1, E). Returns (y, new_cache)."""
+    B = x.shape[0]
+    d_inner, nheads, N, W = _dims(cfg)
+    hd = cfg.ssm.headdim
+    xt = x[:, 0]
+
+    z = jnp.einsum("BE,EI->BI", xt, p["in_proj_z"])
+    xc, conv_x = _conv_step(cache["conv_x"],
+                            jnp.einsum("BE,EI->BI", xt, p["in_proj_x"]),
+                            p["conv_x"])
+    Bc, conv_B = _conv_step(cache["conv_B"],
+                            jnp.einsum("BE,EN->BN", xt, p["in_proj_B"]),
+                            p["conv_B"])
+    Cc, conv_C = _conv_step(cache["conv_C"],
+                            jnp.einsum("BE,EN->BN", xt, p["in_proj_C"]),
+                            p["conv_C"])
+    log_f, i_gate = _gates(p, jnp.einsum("BE,EH->BH", xt, p["in_proj_dt"]))
+
+    v = xc.reshape(B, nheads, hd)
+    q = jnp.broadcast_to(Cc[:, None, :], (B, nheads, N))
+    k = jnp.broadcast_to(Bc[:, None, :], (B, nheads, N))
+    y, (S_new, n_new) = gla_decode_step(q, k, v, log_f, i_gate,
+                                        (cache["ssm"], cache["ssm_n"]))
+    y = y + p["D"][None, :, None] * v.astype(jnp.float32)
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_inner"], cfg.rms_eps)
+    out = jnp.einsum("BI,IE->BE", y, p["out_proj"])[:, None]
+    return out, {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "ssm": S_new, "ssm_n": n_new}

@@ -1,0 +1,144 @@
+"""Expert-parallel Mixture-of-Experts FFN.
+
+Design (see DESIGN.md §5): experts are sharded over the ``model`` mesh axis;
+activations stay replicated across model ranks within each data shard.  Each
+expert shard selects the tokens routed to *its* experts (fixed capacity,
+sort-based dispatch — no (T, X, C) one-hot dispatch tensor, which would be
+O(terabytes) at kimi-k2 scale), applies its experts' SwiGLU, and the top-k
+combine is a single ``psum`` over ``model`` — the same collective cost as a
+Megatron TP FFN all-reduce, with a GSPMD-predictable schedule.
+
+Implemented with ``shard_map`` so the dispatch is *local by construction*;
+GSPMD cannot accidentally all-gather the token stream.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.dist.meshctx import MeshContext
+from repro.models.layers import ParamSpec, Params
+
+
+def moe_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    assert cfg.moe is not None
+    d, X, F = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_expert
+    # "moe_ff" maps to ("data",) for FSDP/ZeRO-3-style expert-weight storage
+    # (kimi-k2 1T: expert weights per chip drop 129 GB -> 8 GB; a per-layer
+    # all-gather re-materializes them transiently inside the layer scan).
+    # Default rule is () => fully resident.
+    return {
+        "router": ParamSpec((d, X), ("embed", None), dtype="float32"),
+        "wg": ParamSpec((X, d, F), ("experts", "embed", "moe_ff")),
+        "wu": ParamSpec((X, d, F), ("experts", "embed", "moe_ff")),
+        "wd": ParamSpec((X, F, d), ("experts", "moe_ff", "embed")),
+    }
+
+
+def _capacity(tokens: int, top_k: int, num_experts: int, cf: float) -> int:
+    c = int(np.ceil(tokens * top_k / num_experts * cf))
+    return max(8, int(np.ceil(c / 8)) * 8)
+
+
+def _moe_block(x, router, wg, wu, wd, *, cfg: ModelConfig, mp: int,
+               all_axes: Tuple[str, ...]):
+    """Per-(data, model)-shard body. x: (Bl, S, E) replicated over model."""
+    moe = cfg.moe
+    Bl, S, E = x.shape
+    T = Bl * S
+    X, k = moe.num_experts, moe.top_k
+    E_local = X // mp
+    C = _capacity(T, k, X, moe.capacity_factor)
+    my_rank = jax.lax.axis_index("model")
+    lo = my_rank * E_local
+
+    xf = x.reshape(T, E)
+    logits = jnp.einsum("TE,EX->TX", xf.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                     # (T,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style), pmean over the mesh
+    me = probs.mean(axis=0)                                  # (X,)
+    ce = jnp.zeros((X,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0 / (T * k))
+    aux = X * jnp.sum(me * ce)
+    aux = jax.lax.pmean(aux, all_axes)
+
+    # ---- dispatch: flat assignments, keep only this shard's experts
+    a_eid = topi.reshape(-1)                                 # (T*k,)
+    a_tok = jnp.repeat(jnp.arange(T), k)
+    a_w = topw.reshape(-1)
+    mine = (a_eid >= lo) & (a_eid < lo + E_local)
+    local_eid = jnp.where(mine, a_eid - lo, E_local)         # E_local = "other"
+    order = jnp.argsort(local_eid)                           # stable, groups experts
+    s_eid = local_eid[order]
+    s_tok = a_tok[order]
+    s_w = a_w[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(s_eid), s_eid,
+                                 num_segments=E_local + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(T * k) - starts[s_eid]
+    keep = (s_eid < E_local) & (slot < C)
+    dest = jnp.where(keep, s_eid * C + slot, E_local * C)    # last row = trash
+
+    # .add (not .set): dest is unique for kept rows; the trash row accumulates
+    # dropped tokens but is sliced off, so their gradient contribution is 0.
+    xbuf = jnp.zeros((E_local * C + 1, E), x.dtype).at[dest].add(xf[s_tok])
+    xe = xbuf[:-1].reshape(E_local, C, E)
+
+    # ---- expert SwiGLU (batched over local experts)
+    g = jnp.einsum("XCE,XEF->XCF", xe, wg)
+    u = jnp.einsum("XCE,XEF->XCF", xe, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    oe = jnp.einsum("XCF,XFE->XCE", h, wd).reshape(E_local * C, E)
+
+    # ---- combine: gather each assignment's expert output, weight, sum per tok
+    contrib = oe[jnp.minimum(dest, E_local * C - 1)]
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    contrib = contrib.astype(jnp.float32) * s_w[:, None]
+    y = jax.ops.segment_sum(contrib, s_tok, num_segments=T)  # (T,E) fp32
+    # combine across expert shards in bf16: halves the per-layer all-reduce
+    # payload (EXPERIMENTS.md §Perf kimi iteration 2); local accumulation
+    # stays fp32, only the wire format narrows.
+    y = jax.lax.psum(y.astype(jnp.bfloat16), "model")
+    return y.reshape(Bl, S, E).astype(x.dtype), aux
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
+            ctx: MeshContext) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, E) batch-sharded. Returns (out, aux_loss)."""
+    mesh = ctx.mesh
+    mp = ctx.axis_size("model")
+    dp = ctx.dp_axes
+    # FSDP gather: if expert weights are stored sharded over data ("moe_ff"),
+    # re-materialize full (per-model-shard) weights just for this layer.
+    wg_f = ctx.constrain(p["wg"], ("experts", None, None))
+    wu_f = ctx.constrain(p["wu"], ("experts", None, None))
+    wd_f = ctx.constrain(p["wd"], ("experts", None, None))
+    x_spec = P(dp if dp else None, None, None)
+    w_spec = {
+        "router": P(None, None),
+        "wg": P("model", None, None),
+        "wu": P("model", None, None),
+        "wd": P("model", None, None),
+    }
+    all_axes = tuple(mesh.axis_names)
+    fn = partial(_moe_block, cfg=cfg, mp=mp, all_axes=all_axes)
+    out, aux = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(x_spec, w_spec["router"], w_spec["wg"], w_spec["wu"],
+                  w_spec["wd"]),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], wg_f, wu_f, wd_f)
+    return out, aux

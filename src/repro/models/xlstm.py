@@ -1,0 +1,226 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel via GLA) and
+sLSTM (scalar memory with recurrent gate connections, inherently sequential).
+
+Faithfulness notes (DESIGN.md §2):
+* mLSTM uses the stabilized-exponential input gate replaced by a sigmoid
+  (TPU-friendly; the normalizer ``n`` is kept, so outputs stay bounded).
+* sLSTM keeps the *true* stabilized exponential gating and the recurrent
+  (h_{t-1} -> gates) connections — it is sequential by construction, which
+  is exactly what the xLSTM paper states; we lax.scan it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.meshctx import MeshContext
+from repro.models.gla import chunked_gla, gla_decode_step
+from repro.models.layers import ParamSpec, Params, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    dp = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+    H = cfg.num_heads
+    return dp, H, dp // H
+
+
+def mlstm_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    dp, H, dh = _mlstm_dims(cfg)
+    return {
+        "up_x": ParamSpec((d, dp), ("embed", "mlp")),
+        "up_z": ParamSpec((d, dp), ("embed", "mlp")),
+        "wq": ParamSpec((dp, dp), ("mlp", "heads")),
+        "wk": ParamSpec((dp, dp), ("mlp", "heads")),
+        "wv": ParamSpec((dp, dp), ("mlp", "heads")),
+        "w_i": ParamSpec((dp, H), ("mlp", "heads")),
+        "w_f": ParamSpec((dp, H), ("mlp", "heads")),
+        "b_f": ParamSpec((H,), ("heads",), init="ones", dtype="float32"),
+        "norm_h": ParamSpec((dp,), ("mlp",), init="ones"),
+        "down": ParamSpec((dp, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_qkvgates(p: Params, xin: jax.Array, H: int, dh: int):
+    B = xin.shape[:-1]
+    q = jnp.einsum("...I,IJ->...J", xin, p["wq"]).reshape(*B, H, dh) / (dh ** 0.5)
+    k = jnp.einsum("...I,IJ->...J", xin, p["wk"]).reshape(*B, H, dh)
+    v = jnp.einsum("...I,IJ->...J", xin, p["wv"]).reshape(*B, H, dh)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("...I,IH->...H", xin, p["w_f"]).astype(jnp.float32)
+        + p["b_f"])
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("...I,IH->...H", xin, p["w_i"]).astype(jnp.float32))
+    return q, k, v, log_f, i_gate
+
+
+def _mlstm_core(p: Params, x: jax.Array, cfg: ModelConfig, ctx: MeshContext,
+                *, with_state: bool = False):
+    B, S, _ = x.shape
+    dp, H, dh = _mlstm_dims(cfg)
+    xin = jnp.einsum("BSE,EI->BSI", x, p["up_x"])
+    z = jnp.einsum("BSE,EI->BSI", x, p["up_z"])
+    q, k, v, log_f, i_gate = _mlstm_qkvgates(p, xin, H, dh)
+    res = chunked_gla(q, k, v, log_f, i_gate,
+                      chunk=min(cfg.xlstm.chunk_size, S), normalize=True,
+                      return_state=with_state)
+    y, state = res if with_state else (res, None)
+    y = y.reshape(B, S, dp).astype(x.dtype)
+    y = rms_norm(y, p["norm_h"], cfg.rms_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("BSI,IE->BSE", y, p["down"])
+    if with_state:
+        return out, {"S": state[0], "n": state[1]}
+    return out
+
+
+def mlstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  ctx: MeshContext) -> jax.Array:
+    return _mlstm_core(p, x, cfg, ctx, with_state=False)
+
+
+def mlstm_forward_with_state(p: Params, x: jax.Array, cfg: ModelConfig,
+                             ctx: MeshContext):
+    return _mlstm_core(p, x, cfg, ctx, with_state=True)
+
+
+def mlstm_cache_template(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    dp, H, dh = _mlstm_dims(cfg)
+    return {
+        "S": ParamSpec((batch, H, dh, dh), ("batch", "heads", None, None),
+                       init="zeros", dtype="float32"),
+        "n": ParamSpec((batch, H, dh), ("batch", "heads", None),
+                       init="zeros", dtype="float32"),
+    }
+
+
+def mlstm_decode(p: Params, x: jax.Array, cache, cfg: ModelConfig,
+                 ctx: MeshContext):
+    B = x.shape[0]
+    dp, H, dh = _mlstm_dims(cfg)
+    xt = x[:, 0]
+    xin = jnp.einsum("BE,EI->BI", xt, p["up_x"])
+    z = jnp.einsum("BE,EI->BI", xt, p["up_z"])
+    q, k, v, log_f, i_gate = _mlstm_qkvgates(p, xin, H, dh)
+    y, (S_new, n_new) = gla_decode_step(q, k, v, log_f, i_gate,
+                                        (cache["S"], cache["n"]),
+                                        normalize=True)
+    y = y.reshape(B, dp).astype(x.dtype)
+    y = rms_norm(y, p["norm_h"], cfg.rms_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("BI,IE->BE", y, p["down"])[:, None], \
+        {"S": S_new, "n": n_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential; stabilized exponential gating; recurrent gates)
+# ---------------------------------------------------------------------------
+
+
+def slstm_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    H, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    # 128-align the GeGLU width (MXU tiling + even sharding over the mesh)
+    ff = max(128, int(round(d * cfg.xlstm.proj_factor_slstm / 128)) * 128)
+    t: Dict[str, ParamSpec] = {}
+    for g in ("z", "i", "f", "o"):
+        t[f"w_{g}"] = ParamSpec((d, d), ("embed", "heads"))
+        # block-diagonal recurrent weights, one (dh, dh) block per head
+        t[f"r_{g}"] = ParamSpec((H, dh, dh), ("heads", None, None),
+                                init="normal", scale=0.4)
+        t[f"b_{g}"] = ParamSpec((d,), ("heads",),
+                                init="ones" if g == "f" else "zeros",
+                                dtype="float32")
+    t["norm_h"] = ParamSpec((d,), ("embed",), init="ones")
+    # post-recurrence GeGLU FFN (proj factor 4/3, per the xLSTM paper)
+    t["ff_gate"] = ParamSpec((d, ff), ("embed", "mlp"))
+    t["ff_up"] = ParamSpec((d, ff), ("embed", "mlp"))
+    t["ff_down"] = ParamSpec((ff, d), ("mlp", "embed"))
+    return t
+
+
+def slstm_cache_template(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    mk = lambda init: ParamSpec((batch, d), ("batch", "embed"), init=init,
+                                dtype="float32")
+    return {"c": mk("zeros"), "n": mk("zeros"), "h": mk("zeros"),
+            "m": mk("zeros")}
+
+
+def _slstm_step(p: Params, cfg: ModelConfig, state, pre):
+    """One sLSTM timestep. state: dict(c,n,h,m) each (B,d) fp32.
+    pre: dict of projected inputs w_g x_t (B,d)."""
+    H, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    B = state["h"].shape[0]
+    hh = state["h"].reshape(B, H, dh)
+
+    def rec(g):
+        r = jnp.einsum("BHd,Hde->BHe", hh, p[f"r_{g}"].astype(jnp.float32))
+        return pre[g].astype(jnp.float32) + r.reshape(B, H * dh) + p[f"b_{g}"]
+
+    z_t = jnp.tanh(rec("z"))
+    o_t = jax.nn.sigmoid(rec("o"))
+    i_pre, f_pre = rec("i"), rec("f")
+    log_fgate = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_fgate + state["m"], i_pre)       # stabilizer
+    i_t = jnp.exp(i_pre - m_new)
+    f_t = jnp.exp(log_fgate + state["m"] - m_new)
+    c_new = f_t * state["c"] + i_t * z_t
+    n_new = f_t * state["n"] + i_t
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def _slstm_core(p: Params, x: jax.Array, cfg: ModelConfig, ctx: MeshContext,
+                *, with_state: bool = False):
+    B, S, d = x.shape
+    pre = {g: jnp.einsum("BSE,EJ->BSJ", x, p[f"w_{g}"]) for g in "zifo"}
+    state0 = {k: jnp.zeros((B, d), jnp.float32) for k in ("c", "n", "h", "m")}
+
+    def step(state, pre_t):
+        new = _slstm_step(p, cfg, state, pre_t)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(step, state0,
+                             jax.tree.map(lambda t: t.swapaxes(0, 1), pre))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                    # (B,S,d)
+    h = rms_norm(h, p["norm_h"], cfg.rms_eps)
+    # GeGLU FFN
+    g = jax.nn.gelu(jnp.einsum("BSE,EF->BSF", h, p["ff_gate"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    u = jnp.einsum("BSE,EF->BSF", h, p["ff_up"])
+    out = jnp.einsum("BSF,FE->BSE", g * u, p["ff_down"])
+    if with_state:
+        return out, final
+    return out
+
+
+def slstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  ctx: MeshContext) -> jax.Array:
+    return _slstm_core(p, x, cfg, ctx, with_state=False)
+
+
+def slstm_forward_with_state(p: Params, x: jax.Array, cfg: ModelConfig,
+                             ctx: MeshContext):
+    return _slstm_core(p, x, cfg, ctx, with_state=True)
+
+
+def slstm_decode(p: Params, x: jax.Array, cache, cfg: ModelConfig,
+                 ctx: MeshContext):
+    xt = x[:, 0]
+    pre = {g: jnp.einsum("BE,EJ->BJ", xt, p[f"w_{g}"]) for g in "zifo"}
+    new = _slstm_step(p, cfg, cache, pre)
+    h = rms_norm(new["h"].astype(x.dtype), p["norm_h"], cfg.rms_eps)
+    g = jax.nn.gelu(jnp.einsum("BE,EF->BF", h, p["ff_gate"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    u = jnp.einsum("BE,EF->BF", h, p["ff_up"])
+    out = jnp.einsum("BF,FE->BE", g * u, p["ff_down"])[:, None]
+    return out, new

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    make_optimizer,
+    opt_state_shardings,
+)
+from repro.optim.schedules import warmup_cosine  # noqa: F401

@@ -1,0 +1,58 @@
+"""Serving steps: batched prefill and single-token decode with KV caches.
+
+``decode_step`` is the unit that the decode_* dry-run shapes lower: one new
+token per sequence against a cache of ``seq_len`` — the memory-bandwidth-
+bound regime of LM serving (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.dist.meshctx import MeshContext
+from repro.models import api as model_api
+
+Params = Any
+
+
+def make_prefill_step(run: RunConfig, ctx: MeshContext, *, max_seq: int):
+    cfg = run.model
+
+    def prefill_step(params, batch):
+        logits, cache = model_api.prefill(cfg, params, batch, ctx,
+                                          max_seq=max_seq)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(run: RunConfig, ctx: MeshContext):
+    cfg = run.model
+
+    def decode_step(params, tokens, pos, cache):
+        logits, new_cache = model_api.decode_step(cfg, params, tokens, pos,
+                                                  cache, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_cache
+    return decode_step
+
+
+def greedy_generate(run: RunConfig, ctx: MeshContext, params, prompt,
+                    *, steps: int, max_seq: int):
+    """Reference generation loop (prefill + N decode steps)."""
+    cfg = run.model
+    logits, cache = model_api.prefill(cfg, params, {"tokens": prompt}, ctx,
+                                      max_seq=max_seq)
+    B, S = prompt.shape
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    decode = jax.jit(make_decode_step(run, ctx),
+                     donate_argnums=(3,))
+    pos = jnp.int32(S)
+    for i in range(steps - 1):
+        tok, _, cache = decode(params, tok, pos, cache)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,5 @@
+from repro.train.steps import (  # noqa: F401
+    make_train_step,
+    make_eval_step,
+    train_input_shardings,
+)

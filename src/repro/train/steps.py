@@ -1,0 +1,100 @@
+"""Training / eval step factories.
+
+``make_train_step`` returns a pure function
+``(params, opt_state, batch, step) -> (params, opt_state, metrics)``
+suitable for ``jax.jit`` with donated params/opt_state.  Gradient
+accumulation (microbatching) is an inner ``lax.scan`` so the HLO stays
+compact; the gradient all-reduce over the data axes and the ZeRO
+reduce-scatter / all-gather pattern are produced by GSPMD from the
+in/out shardings (see repro.optim.optimizers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.dist.meshctx import MeshContext
+from repro.models import api as model_api
+from repro.optim import make_optimizer
+
+Params = Any
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def split(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(run: RunConfig, ctx: MeshContext):
+    cfg = run.model
+    opt = make_optimizer(run.optimizer)
+    nmb = run.microbatches
+
+    def loss_of(params, batch):
+        loss, metrics = model_api.loss_fn(cfg, params, batch, ctx,
+                                          remat=run.remat)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch, step):
+        if nmb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            mb = _split_microbatches(batch, nmb)
+
+            def acc(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            loss = lsum / nmb
+            metrics = {"loss": loss}
+
+        if run.optimizer.grad_compression == "fp16":
+            # gradient compression trick: communicate / store accumulated
+            # grads at half precision (visible in dry-run bytes).
+            grads = jax.tree.map(lambda g: g.astype(jnp.float16)
+                                 .astype(jnp.float32), grads)
+
+        new_params, new_state = opt.update(grads, opt_state, params, step)
+        metrics = dict(metrics)
+        metrics["step"] = step.astype(jnp.float32)
+        return new_params, new_state, metrics
+
+    return train_step, opt
+
+
+def make_eval_step(run: RunConfig, ctx: MeshContext):
+    cfg = run.model
+
+    def eval_step(params, batch):
+        loss, metrics = model_api.loss_fn(cfg, params, batch, ctx,
+                                          remat="none")
+        return metrics
+    return eval_step
+
+
+def train_input_shardings(run: RunConfig, ctx: MeshContext,
+                          batch_spec: Dict[str, jax.ShapeDtypeStruct]):
+    """NamedShardings for the batch dict (batch dim over pod+data)."""
+    def shard(sds):
+        logical = ["batch"] + [None] * (len(sds.shape) - 1)
+        if len(sds.shape) >= 2 and sds.shape[0] == 1:
+            # long-context single-sequence shapes: shard the sequence instead
+            logical = [None, "seq"] + [None] * (len(sds.shape) - 2)
+        return ctx.sharding(logical, sds.shape)
+    return jax.tree.map(shard, batch_spec)

@@ -1,0 +1,136 @@
+"""Trainer: the supervised loop tying everything together.
+
+data (sealed SecureStreams source) -> train_step (jit, donated) ->
+sealed checkpoints every N steps -> failure recovery (checkpoint-restart)
+-> straggler detection on step times.  This is the end-to-end driver used
+by examples/secure_lm_train.py and the integration tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import RunConfig
+from repro.core.enclave import ingress, egress
+from repro.crypto.keys import derive_stage_key, root_key_from_seed
+from repro.dist.meshctx import MeshContext
+from repro.ft.failures import FailureInjector
+from repro.ft.straggler import StragglerDetector
+from repro.models import api as model_api
+from repro.optim import make_optimizer
+from repro.train.steps import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro-ckpt"
+    sealed_ckpt: bool = True
+    sealed_data: bool = True
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, ctx: MeshContext,
+                 data_fn: Callable[[int], Dict[str, np.ndarray]],
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 injector: Optional[FailureInjector] = None):
+        self.run = run
+        self.ctx = ctx
+        self.tcfg = tcfg
+        self.data_fn = data_fn           # step -> batch dict (deterministic!)
+        self.injector = injector
+        self.detector = StragglerDetector()
+        self.history: List[Dict[str, float]] = []
+        self.straggler_steps: List[int] = []
+
+        step_fn, self.opt = make_train_step(run, ctx)
+        self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self._data_key = derive_stage_key(
+            root_key_from_seed(tcfg.seed), "train-data", 0)
+
+        self.params = model_api.init_params(run.model, jax.random.key(run.seed))
+        self.opt_state = self.opt.init(self.params)
+        self.step = 0
+
+    # ------------------------------------------------------------ data path
+
+    def _sealed_batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Fetch the step's batch through the secure ingest path."""
+        raw = self.data_fn(step)
+        if not self.tcfg.sealed_data:
+            return {k: jnp.asarray(v) for k, v in raw.items()}
+        out = {}
+        for i, (k, v) in enumerate(sorted(raw.items())):
+            chunk = ingress("encrypted", self._data_key,
+                            step * 16 + i, jnp.asarray(v))
+            x, ok = egress("encrypted", self._data_key, chunk)
+            if not bool(ok):
+                raise RuntimeError(f"data chunk MAC failure at step {step}")
+            out[k] = x
+        return out
+
+    # ------------------------------------------------------------- recovery
+
+    def save(self) -> None:
+        ckpt.save(self.tcfg.ckpt_dir, self.step, self.params, self.opt_state,
+                  sealed=self.tcfg.sealed_ckpt, seed=self.tcfg.seed,
+                  extra={"arch": self.run.model.arch_id})
+
+    def restore(self) -> int:
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            self.step = 0
+            return 0
+        step, params, opt_state = ckpt.restore(
+            self.tcfg.ckpt_dir, last, seed=self.tcfg.seed,
+            params_like=self.params, opt_like=self.opt_state)
+        self.params, self.opt_state = params, opt_state
+        self.step = step
+        return step
+
+    # ----------------------------------------------------------------- loop
+
+    def run_steps(self, start: int, end: int) -> int:
+        for s in range(start, end):
+            if self.injector is not None:
+                self.injector.maybe_fail(s)
+            t0 = time.perf_counter()
+            batch = self._sealed_batch(s)
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch, jnp.int32(s))
+            loss = float(metrics.get("loss", jnp.nan))
+            dt = time.perf_counter() - t0
+            if self.detector.observe(dt):
+                self.straggler_steps.append(s)
+            self.step = s + 1
+            if self.step % self.tcfg.log_every == 0:
+                self.history.append({"step": self.step, "loss": loss,
+                                     "sec_per_step": dt})
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        return self.step
+
+    def train(self) -> Dict[str, Any]:
+        from repro.ft.failures import run_with_recovery
+        report = run_with_recovery(
+            total_steps=self.tcfg.total_steps,
+            run_steps=self.run_steps,
+            restore=self.restore,
+        )
+        self.save()
+        return {
+            "final_step": report.final_step,
+            "restarts": report.restarts,
+            "replayed_steps": report.replayed_steps,
+            "history": self.history,
+            "stragglers": self.straggler_steps,
+        }

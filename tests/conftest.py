@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 CPU
+device; only launch/dryrun.py forces the 512-device host platform."""
+import jax
+import pytest
+
+from repro.dist.meshctx import local_mesh_context
+
+
+@pytest.fixture(scope="session")
+def ctx():
+    return local_mesh_context()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

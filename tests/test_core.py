@@ -1,0 +1,169 @@
+"""SecureStreams core: observable semantics, routers, pipeline 3-mode
+agreement, elastic scaling."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SecureStreamConfig
+from repro.core.observable import Observable
+from repro.core.pipeline import Pipeline, Stage
+from repro.core import router as R
+from repro.data.synthetic import (CARRIER_WORD, DELAY_WORD, flight_chunks,
+                                  flight_records)
+
+SET = settings(max_examples=15, deadline=None)
+
+
+# ------------------------------------------------------------- observable
+
+
+def test_observable_listing2_average_age():
+    """The paper's Listing 2: average age of the adult population."""
+    ages = np.concatenate([np.full(10, 15.0), np.full(20, 40.0),
+                           np.full(10, 60.0)]).astype(np.float32)
+    np.random.default_rng(0).shuffle(ages)
+    result = (
+        Observable.from_array(jnp.asarray(ages), chunk_rows=8)
+        .map(lambda c: c)
+        .filter(lambda age: age > 18)
+        .reduce(lambda acc, age, m: {
+            "sum": acc["sum"] + float(jnp.sum(age * m)),
+            "count": acc["count"] + float(jnp.sum(m))},
+            init={"sum": 0.0, "count": 0.0})
+        .subscribe()
+    )
+    avg = result["sum"] / result["count"]
+    expected = (20 * 40 + 10 * 60) / 30
+    assert abs(avg - expected) < 1e-3
+
+
+@SET
+@given(st.integers(1, 5), st.integers(8, 64))
+def test_observable_map_filter_vs_numpy(seed, n):
+    x = np.random.default_rng(seed).standard_normal(n * 4).astype(np.float32)
+    out = (Observable.from_array(jnp.asarray(x), chunk_rows=n)
+           .map(lambda c: c * 2.0)
+           .filter(lambda c: c > 0)
+           .reduce(lambda acc, c, m: acc + float(jnp.sum(c * m)), init=0.0)
+           .subscribe())
+    expected = (x * 2.0)[(x * 2.0) > 0].sum()
+    assert abs(out - expected) < 1e-2
+
+
+def test_observable_window():
+    x = jnp.arange(32, dtype=jnp.float32)
+    seen = []
+    (Observable.from_array(x, chunk_rows=4).window(2)
+     .subscribe(on_next=lambda c: seen.append(np.asarray(c))))
+    assert all(c.shape == (8,) for c in seen) and len(seen) == 4
+
+
+# ----------------------------------------------------------------- router
+
+
+@SET
+@given(st.integers(1, 40), st.integers(1, 6))
+def test_round_robin_fair_queue_inverse(n_chunks, workers):
+    """Outbound round-robin then inbound fair-queue restores stream order."""
+    chunks = list(range(n_chunks))
+    queues = R.round_robin(chunks, workers)
+    merged = list(R.fair_queue(queues))
+    assert merged == chunks
+
+
+@SET
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(0, 100))
+def test_shuffle_by_key_groups(n, num_keys, seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, num_keys, n))
+    data = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    buckets, counts = R.shuffle_by_key(data, keys, num_keys)
+    assert int(counts.sum()) == n
+    for k in range(num_keys):
+        rows = np.asarray(buckets[k][: int(counts[k])])
+        expect = np.asarray(data)[np.asarray(keys) == k]
+        assert sorted(map(tuple, rows)) == sorted(map(tuple, expect))
+
+
+# ------------------------------------------------------------- pipeline
+
+
+def _flight_pipeline(mode):
+    def reduce_fn(acc, chunk):
+        carrier = np.asarray(chunk[:, CARRIER_WORD]).astype(np.int64)
+        delay = np.asarray(chunk[:, DELAY_WORD]).astype(np.int64)
+        valid = delay > 0
+        acc["count"] = acc["count"] + np.bincount(carrier[valid], minlength=20)
+        acc["sum"] = acc["sum"] + np.bincount(carrier[valid],
+                                              weights=delay[valid],
+                                              minlength=20)
+        return acc
+
+    return Pipeline([
+        Stage("mapper", op="identity"),
+        Stage("filter", op="delay_filter_u32", const=15),
+        Stage("reducer", op="custom", reduce_fn=reduce_fn,
+              reduce_init={"count": np.zeros(20), "sum": np.zeros(20)}),
+    ], SecureStreamConfig(mode=mode))
+
+
+def _numpy_oracle(n=2048, chunk=256, seed=3):
+    recs = flight_records(n, seed=seed)
+    delayed = recs[:, DELAY_WORD] > 15
+    cnt = np.bincount(recs[delayed, CARRIER_WORD], minlength=20)
+    s = np.bincount(recs[delayed, CARRIER_WORD],
+                    weights=recs[delayed, DELAY_WORD].astype(np.float64),
+                    minlength=20)
+    return cnt, s
+
+
+@pytest.mark.parametrize("mode", ["plain", "encrypted", "enclave"])
+def test_pipeline_matches_numpy_oracle(mode):
+    p = _flight_pipeline(mode)
+    src = (jnp.asarray(c) for c in flight_chunks(2048, 256, seed=3))
+    out = p.run(src)
+    cnt, s = _numpy_oracle()
+    assert np.array_equal(out["count"], cnt)
+    assert np.allclose(out["sum"], s)
+    rep = p.report()
+    assert rep["mapper"]["chunks"] == 8
+    assert rep["mapper"]["mac_failures"] == 0
+
+
+def test_pipeline_drops_tampered_chunk():
+    """A corrupted chunk must be dropped (MAC failure), not processed."""
+    from repro.core.enclave import ingress
+    from repro.crypto.keys import derive_stage_key, root_key_from_seed
+    p = _flight_pipeline("enclave")
+
+    class Corrupter:
+        def __init__(self, gen):
+            self.gen = gen
+
+        def __iter__(self):
+            for i, c in enumerate(self.gen):
+                yield c
+
+    # easiest corruption point: patch one sealed chunk via a custom source
+    # wrapper around the pipeline internals — emulate by running twice and
+    # comparing MAC failure accounting with a manually corrupted executor.
+    from repro.core.enclave import EnclaveExecutor, seal_tensor
+    from repro.crypto.keys import derive_stage_key
+    key0 = p.keys[0]
+    key1 = p.keys[1]
+    ex = EnclaveExecutor("enclave", key0, key1)
+    chunk = seal_tensor(key0, 0, jnp.zeros((256, 16), jnp.uint32))
+    chunk.blocks = chunk.blocks.at[0, 0].add(np.uint32(1))
+    assert ex.run_static("identity", 0.0, chunk) is None
+    assert ex.errors == 1
+
+
+def test_elastic_scale_stage():
+    p = _flight_pipeline("plain")
+    p2 = p.scale_stage("mapper", 4)
+    assert [s.workers for s in p2.stages] == [4, 1, 1]
+    # scaled pipeline still computes the same result
+    src = (jnp.asarray(c) for c in flight_chunks(1024, 256, seed=3))
+    out = p2.run(src)
+    assert int(out["count"].sum()) > 0

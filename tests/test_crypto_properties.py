@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) for the crypto layer invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.crypto import aead, chacha20, cwmac
+from repro.crypto.keys import derive_stage_key, root_key_from_seed
+
+SET = settings(max_examples=20, deadline=None)
+
+keys8 = st.integers(0, 2 ** 32 - 1)
+
+
+def _key(seed):
+    return jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2 ** 32, 8, dtype=np.uint32))
+
+
+def _nonce(seed):
+    return jnp.asarray(np.random.default_rng(seed + 77).integers(
+        0, 2 ** 32, 3, dtype=np.uint32))
+
+
+@SET
+@given(st.integers(1, 2000), st.integers(0, 1000))
+def test_seal_open_roundtrip(n, seed):
+    key, nonce = _key(seed), _nonce(seed)
+    pt = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2 ** 32, n, dtype=np.uint32))
+    ct, tag = aead.seal(key, nonce, pt)
+    pt2, ok = aead.open_(key, nonce, ct, tag)
+    assert bool(ok) and bool((pt2 == pt).all())
+    # ciphertext differs from plaintext (overwhelming probability for n>=4)
+    if n >= 4:
+        assert not bool((ct == pt).all())
+
+
+@SET
+@given(st.integers(4, 500), st.integers(0, 200), st.integers(0, 10 ** 6))
+def test_tamper_any_word_detected(n, seed, flip):
+    key, nonce = _key(seed), _nonce(seed)
+    pt = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2 ** 32, n, dtype=np.uint32))
+    ct, tag = aead.seal(key, nonce, pt)
+    idx = flip % n
+    ct_bad = ct.at[idx].set(ct[idx] ^ np.uint32(1 + (flip % 7)))
+    _, ok = aead.open_(key, nonce, ct_bad, tag)
+    assert not bool(ok)
+
+
+@SET
+@given(st.integers(1, 300), st.integers(0, 100))
+def test_wrong_key_or_nonce_fails(n, seed):
+    key, nonce = _key(seed), _nonce(seed)
+    pt = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2 ** 32, n, dtype=np.uint32))
+    ct, tag = aead.seal(key, nonce, pt)
+    _, ok1 = aead.open_(_key(seed + 1), nonce, ct, tag)
+    _, ok2 = aead.open_(key, _nonce(seed + 1), ct, tag)
+    assert not bool(ok1) and not bool(ok2)
+
+
+@SET
+@given(st.integers(1, 64), st.integers(0, 50),
+       st.sampled_from(["float32", "bfloat16", "int32", "uint32", "float16"]))
+def test_tensor_framing_roundtrip(rows, seed, dtype):
+    shape = (rows, 3)
+    if dtype in ("float32", "bfloat16", "float16"):
+        x = jax.random.normal(jax.random.key(seed), shape).astype(dtype)
+    else:
+        x = jax.random.randint(jax.random.key(seed), shape, 0, 1000
+                               ).astype(dtype)
+    w, meta = aead.tensor_to_words(x)
+    x2 = aead.words_to_tensor(w, meta)
+    assert x2.dtype == x.dtype and x2.shape == x.shape
+    assert bool((x2 == x).all())
+
+
+@SET
+@given(st.integers(1, 400), st.integers(1, 2 ** 31 - 2),
+       st.integers(0, 2 ** 31 - 2), st.integers(0, 99))
+def test_cwmac_matches_bigint_reference(n, r, s, seed):
+    words = np.random.default_rng(seed).integers(0, 2 ** 32, n,
+                                                 dtype=np.uint32)
+    got = int(cwmac.mac(jnp.asarray(words), jnp.uint32(r), jnp.uint32(s)))
+    assert got == cwmac.mac_reference(words, r, s)
+
+
+@SET
+@given(st.integers(0, 2 ** 31 - 2), st.integers(0, 2 ** 31 - 2))
+def test_mulmod_matches_bigint(a, b):
+    p = (1 << 31) - 1
+    got = int(cwmac.mulmod(jnp.uint32(a), jnp.uint32(b)))
+    assert got == (a * b) % p
+
+
+def test_nonce_uniqueness_per_counter():
+    k = derive_stage_key(root_key_from_seed(0), "edge0", 0)
+    nonces = {tuple(k.nonce(i)) for i in range(1000)}
+    assert len(nonces) == 1000
+
+
+def test_keys_differ_per_stage():
+    root = root_key_from_seed(0)
+    k0 = derive_stage_key(root, "edge0", 0)
+    k1 = derive_stage_key(root, "edge1", 1)
+    assert not np.array_equal(k0.key, k1.key)

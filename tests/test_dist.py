@@ -1,0 +1,131 @@
+"""Distribution layer: mesh-context rules, ZeRO shardings, PP schedule,
+secure channels, HLO analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShardingConfig
+from repro.dist.meshctx import MeshContext, local_mesh_context
+from repro.launch import hloanalysis
+
+
+def _ctx(shape=(1, 1), axes=("data", "model")):
+    mesh = jax.make_mesh(shape, axes)
+    return MeshContext(mesh=mesh, rules=dict(ShardingConfig().lookup()))
+
+
+def test_spec_resolution_basics():
+    ctx = _ctx()
+    # 1-sized axes shard trivially
+    assert ctx.spec_for(("batch", None, "embed"), (8, 4, 16)) == \
+        P("data", None, None)
+
+
+def test_spec_divisibility_fallback():
+    ctx = _ctx()
+    # strict: a dim of 3 cannot shard over axis of size 1? size-1 divides all
+    assert ctx.spec_for(("vocab", "embed"), (3, 5), strict=True) == \
+        P("model", None)
+
+
+def test_spec_skips_missing_axes():
+    ctx = _ctx()
+    # "pod" axis not in this mesh: batch rule (pod, data) -> data only
+    spec = ctx.spec_for(("batch",), (16,))
+    assert spec == P("data")
+
+
+def test_spec_no_double_axis_use():
+    ctx = _ctx()
+    rules = dict(ShardingConfig().with_rule("kv_seq", ("model",)).lookup())
+    ctx.rules = rules
+    # heads and kv_seq both want "model": first dim wins, second replicated
+    spec = ctx.spec_for(("kv_seq", "heads"), (32, 32))
+    assert spec in (P("model", None),)
+
+
+def test_zero_sharding_of_opt_state():
+    from repro.configs.base import OptimizerConfig
+    from repro.models.layers import ParamSpec, abstract_from_template, \
+        shardings_from_template
+    from repro.optim import make_optimizer, opt_state_shardings
+    ctx = _ctx()
+    template = {"layers": {"w": ParamSpec((4, 8, 6), ("layers", "embed",
+                                                      "mlp"))}}
+    params_abs = abstract_from_template(template)
+    p_shard = shardings_from_template(template, ctx)
+    opt = make_optimizer(OptimizerConfig(name="adamw", zero_sharding=True))
+    o_shard = opt_state_shardings(opt, params_abs, p_shard, ctx)
+    m_spec = o_shard["m"]["layers"]["w"].spec
+    # ZeRO: some previously-unsharded dim picked up the "data" axis
+    assert "data" in [a for part in m_spec for a in
+                      ((part,) if not isinstance(part, tuple) else part)
+                      if a]
+
+
+def test_hlo_analyzer_counts_scan_flops():
+    import os
+    sample = os.path.join("/tmp", "hlo_sample.txt")
+    if not os.path.exists(sample):
+        pytest.skip("sample HLO not present")
+    a = hloanalysis.analyze(open(sample).read())
+    assert abs(a.flops - 10 * 2 * 16 * 256 * 256) < 1e-3 * a.flops
+    assert a.collective_bytes > 0
+
+
+def test_hlo_shape_bytes():
+    assert hloanalysis._shape_bytes("f32[4,8]{1,0}") == 128
+    assert hloanalysis._shape_bytes("bf16[10]") == 20
+    assert hloanalysis._shape_bytes("(f32[2], s32[3])") == 20
+    assert hloanalysis._shape_bytes("pred[7]") == 7
+
+
+def test_pp_pipeline_matches_sequential():
+    """GPipe schedule over a 1-stage 'mesh' must equal direct application;
+    on 1 device we can still exercise the schedule logic with S=1."""
+    from repro.dist.pipeline_parallel import pipeline_apply
+    mesh = jax.make_mesh((1,), ("stage",))
+    W = jax.random.normal(jax.random.key(0), (1, 4, 4))  # (S=1 stage, ...)
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    xs = jax.random.normal(jax.random.key(1), (3, 2, 4))  # (M, mb, d)
+    out = pipeline_apply(stage_fn, W, xs, mesh)
+    want = jnp.stack([stage_fn(W[0], xs[i]) for i in range(3)])
+    assert float(jnp.abs(out - want).max()) < 1e-5
+
+
+def test_secure_channel_roundtrip():
+    from repro.core.secure_channel import protect, unprotect
+    from repro.crypto.keys import derive_stage_key, root_key_from_seed
+    key = derive_stage_key(root_key_from_seed(1), "pp", 0)
+    x = jax.random.normal(jax.random.key(2), (4, 6), jnp.bfloat16)
+    ct, tag, meta = protect(key, 5, x)
+    y, ok = unprotect(key, 5, ct, tag, meta)
+    assert bool(ok) and bool((y == x).all())
+    # wrong step (nonce) fails
+    _, ok2 = unprotect(key, 6, ct, tag, meta)
+    assert not bool(ok2)
+
+
+def test_optimizers_descend_quadratic():
+    from repro.configs.base import OptimizerConfig
+    from repro.optim import make_optimizer
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    for name in ("adamw", "adafactor", "sgdm"):
+        opt = make_optimizer(OptimizerConfig(name=name, lr=0.1,
+                                             warmup_steps=0,
+                                             weight_decay=0.0))
+        params = {"w": jnp.zeros((3,), jnp.float32)}
+        state = opt.init(params)
+        loss0 = None
+        for step in range(60):
+            g = {"w": 2 * (params["w"] - target)}
+            l = float(jnp.sum((params["w"] - target) ** 2))
+            loss0 = l if loss0 is None else loss0
+            params, state = opt.update(g, state, params,
+                                       jnp.asarray(step, jnp.int32))
+        assert float(jnp.sum((params["w"] - target) ** 2)) < loss0 * 0.5, name

@@ -1,0 +1,143 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret=True on CPU)
+against its ref.py pure-jnp oracle, over shapes and configurations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.crypto import chacha20 as cc
+from repro.crypto.cwmac import mac as mac_jnp, mac_reference
+from repro.kernels.chacha20.chacha20 import chacha20_xor_blocks
+from repro.kernels.chacha20.ref import chacha20_xor_blocks_ref
+from repro.kernels.chacha20 import ops as chacha_ops
+from repro.kernels.cwmac import ops as mac_ops
+from repro.kernels.enclave_map import ops as enclave_ops
+from repro.kernels.enclave_map.ref import enclave_apply_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+rng = np.random.default_rng(42)
+KEY = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+KEY2 = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+NONCE = jnp.asarray(rng.integers(0, 2 ** 32, 3, dtype=np.uint32))
+
+
+# ---------------------------------------------------------------- chacha20
+
+
+@pytest.mark.parametrize("n_blocks,block_rows", [(256, 64), (512, 512),
+                                                 (1024, 128)])
+def test_chacha20_kernel_matches_ref(n_blocks, block_rows):
+    data = jnp.asarray(rng.integers(0, 2 ** 32, (n_blocks, 16),
+                                    dtype=np.uint32))
+    out_k = chacha20_xor_blocks(KEY, NONCE, 1, data, block_rows=block_rows)
+    out_r = chacha20_xor_blocks_ref(KEY, NONCE, 1, data)
+    assert bool((out_k == out_r).all())
+
+
+@pytest.mark.parametrize("n_words", [1, 15, 16, 17, 1000, 8192])
+def test_chacha20_flat_involution(n_words):
+    w = jnp.asarray(rng.integers(0, 2 ** 32, n_words, dtype=np.uint32))
+    ct = chacha_ops.encrypt_words(KEY, NONCE, w)
+    assert bool((chacha_ops.decrypt_words(KEY, NONCE, ct) == w).all())
+    assert bool((ct == cc.encrypt_words(KEY, NONCE, w)).all())
+
+
+def test_chacha20_rfc7539_block():
+    key = np.array([0x03020100, 0x07060504, 0x0b0a0908, 0x0f0e0d0c,
+                    0x13121110, 0x17161514, 0x1b1a1918, 0x1f1e1d1c],
+                   dtype=np.uint32)
+    nonce = np.array([0x09000000, 0x4a000000, 0x00000000], dtype=np.uint32)
+    blk = cc.chacha20_block(jnp.asarray(key), jnp.asarray(nonce),
+                            jnp.asarray([1], jnp.uint32))[0]
+    expected = np.array([0xe4e7f110, 0x15593bd1, 0x1fdd0f50, 0xc47120a3,
+                         0xc7f4d1c7, 0x0368c033, 0x9aaa2204, 0x4e6cd4c3,
+                         0x466482d2, 0x09aa9f07, 0x05d7c214, 0xa2028bd9,
+                         0xd19c12b5, 0xb94e16de, 0xe883d0cb, 0x4e3c50a2],
+                        dtype=np.uint32)
+    assert np.array_equal(np.asarray(blk), expected)
+
+
+# ------------------------------------------------------------- enclave_map
+
+
+@pytest.mark.parametrize("op,const", [("identity", 0.0), ("scale_f32", 2.5),
+                                      ("relu_f32", 0.0), ("square_f32", 0.0),
+                                      ("threshold_mask", 0.25),
+                                      ("delay_filter_u32", 15)])
+@pytest.mark.parametrize("rows", [256, 512])
+def test_enclave_map_matches_ref(op, const, rows):
+    pt = rng.standard_normal(rows * 16).astype(np.float32)
+    ct = cc.encrypt_words(KEY, NONCE, jnp.asarray(pt.view(np.uint32)))
+    blocks = ct.reshape(-1, 16)
+    out_k = enclave_ops.enclave_map(KEY, KEY2, NONCE, 1, blocks, op=op,
+                                    const=const, block_rows=256)
+    out_r = enclave_apply_ref(KEY, KEY2, NONCE, 1, blocks, op=op, const=const)
+    assert bool((out_k == out_r).all()), op
+
+
+def test_enclave_map_semantics_scale():
+    pt = rng.standard_normal(512 * 16).astype(np.float32)
+    ct = cc.encrypt_words(KEY, NONCE, jnp.asarray(pt.view(np.uint32)))
+    out = enclave_ops.enclave_map(KEY, KEY2, NONCE, 1, ct.reshape(-1, 16),
+                                  op="scale_f32", const=3.0, block_rows=256)
+    dec = cc.decrypt_words(KEY2, NONCE, out.reshape(-1))
+    assert np.allclose(np.asarray(dec).view(np.float32), pt * 3.0)
+
+
+# ------------------------------------------------------------------- cwmac
+
+
+@pytest.mark.parametrize("n_words", [100, 1024, 5000])
+@pytest.mark.parametrize("tile", [256, 1024])
+def test_cwmac_kernel_matches_oracles(n_words, tile):
+    words = jnp.asarray(rng.integers(0, 2 ** 32, n_words, dtype=np.uint32))
+    r = jnp.uint32(0x12345678 & 0x7FFFFFFE)
+    s = jnp.uint32(0x23456789 & 0x7FFFFFFE)
+    t_k = int(mac_ops.mac(words, r, s, tile=tile))
+    t_j = int(mac_jnp(words, r, s))
+    t_h = mac_reference(np.asarray(words), int(r), int(s))
+    assert t_k == t_j == t_h
+
+
+# --------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("S,qc,kc", [(128, 64, 64), (256, 64, 32),
+                                     (256, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_matches_ref(causal, S, qc, kc, dtype):
+    B, H, D = 2, 2, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, D), dtype)
+    o1 = flash_attention_bhsd(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    o2 = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    assert float(jnp.abs(o1.astype(jnp.float32)
+                         - o2.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_custom_vjp_matches_naive_grads():
+    from repro.models.flash import flash_attention as flash_jnp
+    B, S, H, D = 2, 128, 2, 16
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+
+    def naive(q, k, v):
+        s = jnp.einsum("BqHD,BkHD->BHqk", q, k) / np.sqrt(D)
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("BHqk,BkHD->BqHD", p, v)
+
+    g1 = jax.grad(lambda a, b, c: jnp.sum(flash_jnp(a, b, c, True, 32, 64) ** 2),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda a, b, c: jnp.sum(naive(a, b, c) ** 2),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert float(jnp.abs(a - b).max()) < 1e-4

@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced configs of the same family run a
+forward + train step on CPU; output shapes verified and loss/grads finite.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_model_config, reduce_for_smoke
+from repro.models import api
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision_patches":
+        batch["patches"] = jax.random.normal(ks[2], (B, 8, cfg.frontend_dim),
+                                             jnp.bfloat16)
+    elif cfg.frontend == "audio_frames":
+        batch["frames"] = jax.random.normal(ks[2], (B, S, cfg.frontend_dim),
+                                            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_loss(arch, ctx, rng):
+    cfg = reduce_for_smoke(get_model_config(arch))
+    params = api.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    hidden, aux = api.forward(cfg, params, batch, ctx)
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert not bool(jnp.isnan(hidden.astype(jnp.float32)).any())
+    loss, metrics = api.loss_fn(cfg, params, batch, ctx)
+    assert jnp.isfinite(loss), arch
+    # loss should be near ln(vocab) for random init
+    assert 2.0 < float(loss) < 12.0, (arch, float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_train_step_grads_finite(arch, ctx, rng):
+    cfg = reduce_for_smoke(get_model_config(arch))
+    params = api.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    g = jax.grad(lambda p: api.loss_fn(cfg, p, batch, ctx)[0])(params)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_shapes(arch, ctx, rng):
+    cfg = reduce_for_smoke(get_model_config(arch))
+    params = api.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    logits, cache = api.prefill(cfg, params, batch, ctx, max_seq=S + 4)
+    assert logits.shape == (B, cfg.vocab_size)
+    nt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = api.decode_step(cfg, params, nt, jnp.int32(S), cache,
+                                      ctx)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits2).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_matches_forward(arch, ctx, rng):
+    """Teacher-forced decode must reproduce the full forward's last logits:
+    prefill 16 tokens, decode tokens 16..31, compare final logits with the
+    full 32-token forward (capacity boosted for MoE so no tokens drop)."""
+    import dataclasses
+    cfg = reduce_for_smoke(get_model_config(arch))
+    if cfg.frontend != "none":
+        pytest.skip("frontend stubs inject prompt-side embeddings only")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = api.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    tokens = batch["tokens"]
+
+    hidden, _ = api.forward(cfg, params, batch, ctx, remat="none")
+    W = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ref = jnp.einsum("BE,EV->BV", hidden[:, -1], W,
+                     preferred_element_type=jnp.float32)
+
+    half = S // 2
+    pre = dict(batch)
+    pre["tokens"] = tokens[:, :half]
+    _, cache = api.prefill(cfg, params, pre, ctx, max_seq=S)
+    for t in range(half, S):
+        got, cache = api.decode_step(cfg, params, tokens[:, t:t + 1],
+                                     jnp.int32(t), cache, ctx)
+    err = jnp.max(jnp.abs(got - ref)) / (jnp.max(jnp.abs(ref)) + 1e-6)
+    if cfg.moe is not None:
+        # MoE decode: bf16-level differences between the chunked (prefill)
+        # and single-pass (decode) attention can flip top-k router choices
+        # near ties — an inherent property of capacity-routed MoE serving.
+        # Assert the decision-level invariant instead of logit closeness.
+        agree = jnp.mean((jnp.argmax(got, -1) == jnp.argmax(ref, -1))
+                         .astype(jnp.float32))
+        assert float(agree) == 1.0, (arch, float(agree), float(err))
+    else:
+        assert float(err) < 0.08, (arch, float(err))
+
+
+def test_all_cells_defined():
+    from repro.configs import all_cells, cell_supported
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if not cell_supported(*c)[0]]
+    assert len(skips) == 8  # long_500k on the 8 full-attention archs
+
+
+def test_param_counts_sane():
+    # spot checks against the arch names
+    assert 0.9e12 < get_model_config("kimi-k2-1t-a32b").param_count() < 1.3e12
+    a32 = get_model_config("kimi-k2-1t-a32b").active_param_count()
+    assert 25e9 < a32 < 40e9
+    assert 27e9 < get_model_config("qwen2.5-32b").param_count() < 37e9
+    assert 1.0e9 < get_model_config("llama3.2-1b").param_count() < 1.7e9
+    assert 12e9 < get_model_config("qwen2.5-14b").param_count() < 17e9
+    assert 30e9 < get_model_config("granite-34b").param_count() < 40e9
+    assert 0.10e9 < get_model_config("xlstm-125m").param_count() < 0.2e9
+    assert 1.0e9 < get_model_config("zamba2-1.2b").param_count() < 1.65e9
