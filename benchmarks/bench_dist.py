@@ -1,0 +1,67 @@
+"""repro.dist microbenchmarks: pipeline-parallel schedule throughput
+(sealed vs. plain stage boundaries) and the secure sharded shuffle.
+
+These start the BENCH trajectory for the distribution subsystem: the cost
+of AEAD-sealing every GPipe stage boundary (the paper's inter-worker
+encryption, Fig. 6) and of the encrypted all_to_all behind the router's
+shuffle/keyed policies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.crypto.keys import derive_stage_key, root_key_from_seed
+from repro.dist.collectives import exchange, keyed_route, secure_exchange
+from repro.dist.pipeline_parallel import pipeline_apply
+from repro.launch.mesh import make_smoke_mesh
+
+
+def run(quick: bool = False):
+    rows = []
+    S = 2 if quick else 4                     # pipeline stages
+    M = 4 if quick else 8                     # microbatches
+    d = 64 if quick else 128
+    mb = 8
+
+    W = jax.random.normal(jax.random.key(0), (S, d, d), jnp.float32)
+    xs = jax.random.normal(jax.random.key(1), (M, mb, d), jnp.float32)
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    for seal in (False, True):
+        us = time_fn(lambda: pipeline_apply(stage_fn, W, xs, None, seal=seal),
+                     warmup=1, iters=3)
+        toks = M * mb
+        rows.append((f"dist.pp_apply.S{S}.M{M}.seal{int(seal)}", us,
+                     f"rows_per_s={toks / (us / 1e6):.0f}"))
+
+    # sharded shuffle: mailbox all_to_all over the smoke mesh's model axis
+    mesh = make_smoke_mesh()
+    axis = "model"
+    Wm = int(mesh.shape[axis])
+    nb = 256 if quick else 1024
+    x = jax.random.normal(jax.random.key(2), (Wm, Wm, nb, 16), jnp.float32)
+    key = derive_stage_key(root_key_from_seed(0), "shuffle", 0)
+
+    us = time_fn(lambda: exchange(x, mesh, axis), warmup=1, iters=3)
+    mbytes = x.size * 4 / 1e6
+    rows.append((f"dist.shuffle.plain.W{Wm}", us,
+                 f"MB_per_s={mbytes / (us / 1e6):.0f}"))
+    us = time_fn(lambda: secure_exchange(x, mesh, axis, key=key, step=0)[0],
+                 warmup=1, iters=3)
+    rows.append((f"dist.shuffle.sealed.W{Wm}", us,
+                 f"MB_per_s={mbytes / (us / 1e6):.0f}"))
+
+    # keyed routing (consistent hash -> bucket -> exchange)
+    n = 512 if quick else 2048
+    rowsx = jax.random.normal(jax.random.key(3), (Wm, n, 8), jnp.float32)
+    rkeys = jax.random.randint(jax.random.key(4), (Wm, n), 0, 1 << 20)
+    us = time_fn(lambda: keyed_route(rowsx, rkeys, mesh, axis, key=key,
+                                     step=0)[0],
+                 warmup=1, iters=3)
+    rows.append((f"dist.keyed_route.sealed.W{Wm}", us,
+                 f"rows_per_s={Wm * n / (us / 1e6):.0f}"))
+    return rows

@@ -21,6 +21,7 @@ def run(quick: bool = False):
     mapper_counts = [1, 2, 4] if quick else [1, 2, 4, 8, 16]
     for w in mapper_counts:
         times = []
+        per_worker = None
         for rep in range(reps):
             def reduce_fn(acc, chunk):
                 delay = np.asarray(chunk[:, DELAY_WORD]).astype(np.int64)
@@ -37,6 +38,9 @@ def run(quick: bool = False):
             p.run(jnp.asarray(c) for c in
                   flight_chunks(n_records, CHUNK * w, seed=rep))
             times.append(time.perf_counter() - t0)
+            per_worker = p.report()["mapper"]["per_worker"]
+        pw = "/".join(str(c) for c in per_worker)
         rows.append((f"scaling_mappers.m{w}", float(np.mean(times)) * 1e6,
-                     f"std={float(np.std(times)) * 1e6:.0f}us"))
+                     f"std={float(np.std(times)) * 1e6:.0f}us "
+                     f"mapper_chunks_per_worker={pw}"))
     return rows

@@ -18,6 +18,7 @@ MODULES = [
     ("pipeline", "benchmarks.bench_pipeline_throughput"),     # Fig. 6
     ("scaling_stages", "benchmarks.bench_scaling_stages"),    # Fig. 7
     ("scaling_mappers", "benchmarks.bench_scaling_mappers"),  # Fig. 8
+    ("dist", "benchmarks.bench_dist"),                   # repro.dist layer
     ("loc", "benchmarks.bench_loc"),                     # Table 1
     ("kernels", "benchmarks.bench_kernels"),             # beyond-paper
     ("roofline", "benchmarks.bench_roofline"),           # §Roofline table
@@ -27,8 +28,11 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias for --quick (CI smoke pass)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    args.quick = args.quick or args.smoke
     print("name,us_per_call,derived")
     failed = 0
     for name, mod in MODULES:

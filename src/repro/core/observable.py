@@ -52,11 +52,13 @@ class Observable:
 
     @staticmethod
     def from_array(x, chunk_rows: int) -> "Observable":
-        n = x.shape[0] // chunk_rows
+        n_full, rem = divmod(x.shape[0], chunk_rows)
 
         def gen():
-            for i in range(n):
+            for i in range(n_full):
                 yield x[i * chunk_rows:(i + 1) * chunk_rows]
+            if rem:  # ragged tail chunk — rows must not be dropped
+                yield x[n_full * chunk_rows:]
         return Observable(gen())
 
     # ------------------------------------------------------------- operators
@@ -113,10 +115,7 @@ class Observable:
         mask = None
         for op in self._ops:
             if op.kind == "map":
-                if mask is None:
-                    chunk = op.fn(chunk)
-                else:
-                    chunk = op.fn(chunk)  # maps are maskwise-transparent
+                chunk = op.fn(chunk)  # maps are maskwise-transparent
             elif op.kind == "filter":
                 m = op.fn(chunk)
                 mask = m if mask is None else (mask & m)

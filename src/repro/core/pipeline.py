@@ -13,9 +13,12 @@ Per-stage counters, byte totals, and MAC failures feed the benchmarks
 """
 from __future__ import annotations
 
+import dataclasses
+import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, \
+    Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +49,9 @@ class StageMetrics:
     bytes: int = 0
     seconds: float = 0.0
     mac_failures: int = 0
+    # chunks handled per worker of the stage (round-robin fan-out accounting;
+    # survives rescaling — scale_stage pads/keeps this list).
+    per_worker: List[int] = field(default_factory=list)
 
     @property
     def throughput_mbps(self) -> float:
@@ -58,6 +64,7 @@ class Pipeline:
                  seed: int = 0):
         self.stages = list(stages)
         self.secure = secure
+        self.seed = seed
         root = root_key_from_seed(seed)
         # edge i connects stage i-1 -> i; key per edge (+ source and sink).
         self.keys: List[StageKey] = [
@@ -69,85 +76,129 @@ class Pipeline:
 
     # ------------------------------------------------------------------ run
 
+    def _worker_pool(self, i: int, st: Stage) -> List[EnclaveExecutor]:
+        """One executor per worker of stage i (paper: W identical workers
+        behind the stage's inbound router, all sharing the edge keys)."""
+        mode = self.secure.mode
+        st_mode = mode if st.sgx else ("plain" if mode == "plain"
+                                       else "encrypted")
+        return [EnclaveExecutor(st_mode, self.keys[i], self.keys[i + 1])
+                for _ in range(max(1, st.workers))]
+
+    def _stage_stream(self, upstream: Iterator[SealedChunk], st: Stage,
+                      pool: List[EnclaveExecutor]) -> Iterator[SealedChunk]:
+        """Fan a chunk stream across the stage's workers.
+
+        Outbound edge: round-robin dispatch (paper's Push socket) over the
+        worker pool; inbound edge: fair-queue merge (Pull socket) of the
+        worker sub-streams — both via repro.core.router, so the rr->fq
+        composition preserves stream order.  Chunks that fail their MAC
+        check are dropped (reactive on_error semantics) and counted.
+        """
+        W = len(pool)
+        m = self.metrics[st.name]
+        if len(m.per_worker) < W:
+            m.per_worker.extend([0] * (W - len(m.per_worker)))
+        while True:
+            window = list(itertools.islice(upstream, W))
+            if not window:
+                return
+            worker_outs: List[List[SealedChunk]] = []
+            for w, queue in enumerate(R.round_robin(window, W)):
+                outs: List[SealedChunk] = []
+                for chunk in queue:
+                    t0 = time.perf_counter()
+                    if st.fn is not None:
+                        out = pool[w].run(st.fn, chunk)
+                    else:
+                        out = pool[w].run_static(st.op, st.const, chunk)
+                    m.seconds += time.perf_counter() - t0
+                    if out is None:
+                        m.mac_failures += 1
+                        continue
+                    m.chunks += 1
+                    m.per_worker[w] += 1
+                    m.bytes += int(chunk.n_words) * 4
+                    outs.append(out)
+                worker_outs.append(outs)
+            yield from R.fair_queue(worker_outs)
+
     def run(self, source: Iterable[jax.Array],
             on_result: Optional[Callable] = None) -> Any:
         """Stream source tensors through all stages; returns the terminal
         reduce value (if the last stage reduces) or the last chunk."""
         mode = self.secure.mode
-        execs = []
-        for i, st in enumerate(self.stages):
-            st_mode = mode if st.sgx else ("plain" if mode == "plain"
-                                           else "encrypted")
-            execs.append(EnclaveExecutor(st_mode, self.keys[i],
-                                         self.keys[i + 1]))
+        stream: Iterator[SealedChunk] = (
+            ingress(mode, self.keys[0], counter, x)
+            for counter, x in enumerate(source))
 
-        reduce_state: Any = None
-        reduce_started = False
-        final = None
+        # compose map/filter stages up to the terminal reduce (if any)
+        reduce_idx = next((i for i, s in enumerate(self.stages)
+                           if s.reduce_fn is not None), None)
+        end = len(self.stages) if reduce_idx is None else reduce_idx
+        for i in range(end):
+            st = self.stages[i]
+            stream = self._stage_stream(stream, st, self._worker_pool(i, st))
 
-        for counter, x in enumerate(source):
-            chunk = ingress(mode, self.keys[0], counter, x)
-            alive = True
-            for i, (st, ex) in enumerate(zip(self.stages, execs)):
+        if reduce_idx is not None:
+            # terminal reduce: decrypt at the sink edge (trusted subscriber)
+            # and fold; the reduce swallows the stream.
+            st = self.stages[reduce_idx]
+            m = self.metrics[st.name]
+            reduce_state: Any = None
+            reduce_started = False
+            for chunk in stream:
                 t0 = time.perf_counter()
-                m = self.metrics[st.name]
-                if st.reduce_fn is not None:
-                    # terminal reduce: decrypt at the sink edge (trusted
-                    # subscriber) and fold.
-                    val, ok = egress(ex.mode if ex.mode != "plain" else "plain",
-                                     self.keys[i], chunk)
-                    if not bool(ok):
-                        m.mac_failures += 1
-                        alive = False
-                        break
-                    if not reduce_started:
-                        reduce_state = st.reduce_init
-                        reduce_started = True
-                    reduce_state = st.reduce_fn(reduce_state, val)
-                    m.chunks += 1
-                    m.bytes += int(chunk.n_words) * 4
-                    m.seconds += time.perf_counter() - t0
-                    alive = False  # reduce swallows the chunk
-                    break
-                if st.fn is not None:
-                    out = ex.run(st.fn, chunk)
-                else:
-                    out = ex.run_static(st.op, st.const, chunk)
-                m.seconds += time.perf_counter() - t0
-                if out is None:
+                val, ok = egress(mode, self.keys[reduce_idx], chunk)
+                if not bool(ok):
                     m.mac_failures += 1
-                    alive = False
-                    break
+                    continue
+                if not reduce_started:
+                    reduce_state = st.reduce_init
+                    reduce_started = True
+                reduce_state = st.reduce_fn(reduce_state, val)
                 m.chunks += 1
                 m.bytes += int(chunk.n_words) * 4
-                chunk = out
-            if alive:
-                result, ok = egress(mode, self.keys[len(self.stages)], chunk)
-                final = result
-                if on_result is not None and bool(ok):
-                    on_result(result)
+                m.seconds += time.perf_counter() - t0
+            return reduce_state if reduce_started else None
 
-        if reduce_started:
-            return reduce_state
+        final = None
+        for chunk in stream:
+            result, ok = egress(mode, self.keys[len(self.stages)], chunk)
+            final = result
+            if on_result is not None and bool(ok):
+                on_result(result)
         return final
 
     # ------------------------------------------------------------- elastic
 
     def scale_stage(self, name: str, workers: int) -> "Pipeline":
-        """Elastic scaling: change a stage's worker count (paper §5.5)."""
+        """Elastic scaling: change a stage's worker count (paper §5.5).
+
+        Session keys, the key-derivation seed, AND the accumulated
+        StageMetrics carry forward, so throughput/error reports stay
+        continuous across rescale events (the paper's live-reconfiguration
+        experiment reports one unbroken trajectory).
+        """
         stages = [
             Stage(**{**s.__dict__, "workers": workers}) if s.name == name
             else s for s in self.stages
         ]
-        p = Pipeline(stages, self.secure)
+        p = Pipeline(stages, self.secure, seed=self.seed)
         p.keys = self.keys
+        for sname, m in self.metrics.items():
+            pw = list(m.per_worker)
+            if sname == name and len(pw) < workers:
+                pw.extend([0] * (workers - len(pw)))
+            p.metrics[sname] = dataclasses.replace(m, per_worker=pw)
         return p
 
-    def report(self) -> Dict[str, Dict[str, float]]:
+    def report(self) -> Dict[str, Dict[str, Any]]:
         return {
             name: {"chunks": m.chunks, "bytes": m.bytes,
                    "seconds": round(m.seconds, 4),
                    "throughput_mbps": round(m.throughput_mbps, 2),
-                   "mac_failures": m.mac_failures}
+                   "mac_failures": m.mac_failures,
+                   "per_worker": list(m.per_worker)}
             for name, m in self.metrics.items()
         }

@@ -16,14 +16,11 @@ pipeline scheduler (repro.core.pipeline).
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Iterator, List, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
 Chunk = Any
 
@@ -84,18 +81,29 @@ def shuffle_by_key(chunk: jax.Array, keys: jax.Array, num_keys: int,
     return flat.reshape(num_keys, cap, *chunk.shape[1:]), counts
 
 
-def shuffle_sharded(x: jax.Array, mesh, axis: str = "model"):
-    """All-to-all keyed shuffle across a mesh axis (router as collective).
+def shuffle_sharded(x: jax.Array, mesh, axis: str = "model",
+                    *, key=None, step=None):
+    """All-to-all shuffle across a mesh axis (router as collective).
 
-    x: (W, n, ...) where W == mesh.shape[axis]; row block j on worker i is
-    sent to worker j — the ZeroMQ 'shuffler' as one lax.all_to_all.
+    x: (W, W, ...) mailbox layout — x[i, j] is the sub-block worker i
+    sends to worker j; returns the inbox view y[j, i] = x[i, j] (the
+    ZeroMQ 'shuffler' as one lax.all_to_all).  With ``key`` the blocks
+    are AEAD-sealed so the wire carries only ciphertext (``step`` is then
+    required, unique per round), and the result is (y, ok) with per-block
+    MAC verdicts — repro.dist.collectives.
     """
-    from jax import shard_map
+    from repro.dist import collectives
 
-    def block(xb):
-        return jax.lax.all_to_all(xb, axis, 0, 0, tiled=True)
+    if key is not None:
+        return collectives.secure_exchange(x, mesh, axis, key=key, step=step)
+    return collectives.exchange(x, mesh, axis)
 
-    W = mesh.shape[axis]
-    spec = P(axis, *([None] * (x.ndim - 1)))
-    return shard_map(block, mesh=mesh, in_specs=spec, out_specs=spec,
-                     check_vma=False)(x)
+
+def route_keyed_sharded(x: jax.Array, row_keys: jax.Array, mesh,
+                        axis: str = "model", *, key=None, step=None):
+    """The ``keyed`` policy on a mesh: consistent hash-routing of rows to
+    worker shards, optionally over sealed channels (dist.collectives)."""
+    from repro.dist import collectives
+
+    return collectives.keyed_route(x, row_keys, mesh, axis, key=key,
+                                   step=step)

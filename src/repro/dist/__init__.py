@@ -1,0 +1,17 @@
+"""repro.dist — the distribution subsystem.
+
+The paper scales its secure-stream pipelines across workers connected by
+encrypted channels (§4-5, Fig. 7/8).  TPU-natively that splits into three
+concerns, one module each:
+
+* :mod:`repro.dist.meshctx`            — mesh + logical-axis sharding rules
+  (``MeshContext``), the object every model/optimizer/serving layer takes;
+* :mod:`repro.dist.collectives`        — secure sharded collectives: the
+  ZeroMQ shuffler as an (optionally AEAD-sealed) ``all_to_all``;
+* :mod:`repro.dist.pipeline_parallel`  — GPipe-style microbatch schedule
+  whose stage boundaries are sealed with the ChaCha20/CW-MAC channel.
+
+``repro.dist.compat`` papers over jax version differences (``shard_map``
+moved out of ``jax.experimental`` and renamed ``check_rep``->``check_vma``).
+"""
+from repro.dist.meshctx import MeshContext, local_mesh_context  # noqa: F401

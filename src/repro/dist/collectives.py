@@ -1,0 +1,190 @@
+"""Secure sharded collectives: the ZeroMQ shuffler as encrypted all_to_all.
+
+The paper's map->reduce boundary is a keyed shuffle over TLS links between
+workers.  On a mesh the workers are shards of an axis and the shuffle is
+one ``all_to_all``; the TLS link becomes an AEAD seal applied *before* the
+collective, so the ICI/DCN wire only ever carries ChaCha20 ciphertext and
+CW-MAC tags, and each destination shard verifies every block it receives.
+
+Layout convention ("mailbox"): a routed tensor has shape (W, W, ...) with
+``x[i, j]`` the sub-block worker i sends to worker j; :func:`exchange`
+returns the inbox view ``y[j, i] = x[i, j]``.  Nonces are derived from
+``(step, src, dst)`` so no (key, nonce) pair is ever reused across shards
+or rounds.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.crypto import aead
+from repro.crypto.keys import StageKey
+from repro.dist.compat import shard_map
+
+U32 = jnp.uint32
+
+
+def _route_nonces(W: int, step: int) -> jax.Array:
+    """(W*W, 3) nonces for the (src, dst) routing counters of one round.
+
+    Counter ``(step*W + src)*W + dst`` is unique per (key, step, src, dst),
+    so no nonce is ever reused across shards or rounds.  Computed host-side
+    (numpy): seal/open run eagerly, mirroring the enclave executor — only
+    the all_to_all itself is a compiled program, and it touches ciphertext
+    exclusively.
+    """
+    src, dst = np.meshgrid(np.arange(W, dtype=np.uint64),
+                           np.arange(W, dtype=np.uint64), indexing="ij")
+    # all-uint64 arithmetic: mixing np.uint64 scalars with Python ints
+    # promotes to float64 under NumPy 1.x value-based casting
+    W64 = np.uint64(W)
+    c = (np.uint64(step) * W64 + src) * W64 + dst
+    return jnp.asarray(np.stack([np.zeros_like(c),
+                                 c & np.uint64(0xFFFFFFFF),
+                                 c >> np.uint64(32)],
+                                axis=-1).reshape(W * W, 3).astype(np.uint32))
+
+
+def _mailbox_spec(ndim: int, axis: str) -> P:
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def _check_mailbox(x: jax.Array, W: int) -> None:
+    if x.ndim < 2 or x.shape[0] != W or x.shape[1] != W:
+        raise ValueError(
+            f"mailbox layout requires shape (W, W, ...) with W={W}; "
+            f"got {x.shape}")
+
+
+def exchange(x: jax.Array, mesh, axis: str = "model") -> jax.Array:
+    """Plain all_to_all of mailbox blocks: ``y[j, i] = x[i, j]``."""
+    W = int(mesh.shape[axis])
+    _check_mailbox(x, W)
+    spec = _mailbox_spec(x.ndim, axis)
+
+    def block(xb):  # local (1, W, ...)
+        return jax.lax.all_to_all(xb[0], axis, 0, 0, tiled=True)[None]
+
+    return shard_map(block, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_vma=False)(x)
+
+
+def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
+                    key: StageKey, step: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """AEAD-sealed all_to_all: ciphertext + tags cross the wire.
+
+    Each (src=i, dst=j) sub-block is sealed under ``key`` with counter
+    ``(step*W + i)*W + j`` before the collective and opened (MAC-checked)
+    on the destination shard.  ``step`` is *required* and must be unique
+    per (key, round) — reusing it reuses every (key, nonce) pair, i.e.
+    a two-time pad.  ``x`` must be a 4-byte dtype (words are a same-width
+    bitcast).  Returns ``(y, ok)`` with ``y[j, i]`` the opened block
+    worker j received from i and ``ok[j, i]`` its MAC verdict.
+
+    Seal/open execute eagerly shard-side (the enclave-executor idiom —
+    jitting ChaCha20 costs minutes of XLA compile for zero reuse); the
+    compiled collective program only ever sees ciphertext, which is the
+    security boundary that matters.
+    """
+    if step is None:
+        raise ValueError(
+            "secure_exchange requires an explicit per-round step: reusing "
+            "a (key, step) pair reuses the ChaCha20 keystream")
+    W = int(mesh.shape[axis])
+    _check_mailbox(x, W)
+    if x.dtype.itemsize != 4:
+        raise ValueError(f"secure_exchange needs a 4-byte dtype, got {x.dtype}")
+    blk_shape = x.shape[2:]
+    n_words = math.prod(blk_shape) if blk_shape else 1
+    kw = jnp.asarray(key.key)
+
+    flat = x.reshape(W * W, n_words)
+    words = flat if x.dtype == jnp.uint32 else \
+        jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    nonces = _route_nonces(W, step)                       # (W*W, 3) [src, dst]
+    ct, tags = jax.vmap(aead.seal, in_axes=(None, 0, 0))(kw, nonces, words)
+
+    # only ciphertext and tags cross the wire
+    ct_r = exchange(ct.reshape(W, W, n_words), mesh, axis)
+    tag_r = exchange(tags.reshape(W, W, 2), mesh, axis)
+
+    # inbox[dst, src] was sealed with the (src, dst) counter
+    nonces_in = nonces.reshape(W, W, 3).swapaxes(0, 1).reshape(W * W, 3)
+    pt, ok = jax.vmap(aead.open_, in_axes=(None, 0, 0, 0))(
+        kw, nonces_in, ct_r.reshape(W * W, n_words),
+        tag_r.reshape(W * W, 2))
+    out = pt if x.dtype == jnp.uint32 else \
+        jax.lax.bitcast_convert_type(pt, x.dtype)
+    return out.reshape(W, W, *blk_shape), ok.reshape(W, W)
+
+
+def _consistent_hash(k: jax.Array) -> jax.Array:
+    """Cheap integer mix (Knuth multiplicative) for consistent routing."""
+    k = k.astype(U32) * U32(0x9E3779B1)
+    return k ^ (k >> U32(16))
+
+
+def keyed_route(x: jax.Array, row_keys: jax.Array, mesh,
+                axis: str = "model", *, key: Optional[StageKey] = None,
+                step: Optional[int] = None, hash_keys: bool = True):
+    """The router's ``keyed`` policy as a sharded collective.
+
+    ``x``: (W, n, ...) rows resident shard-wise on ``axis``; ``row_keys``:
+    (W, n) integer keys.  Each shard buckets its rows by
+    ``hash(key) % W`` (dense, via :func:`repro.core.router.shuffle_by_key`)
+    and the buckets cross the mesh through :func:`exchange` — or
+    :func:`secure_exchange` when ``key`` is given (``step`` then required,
+    unique per round), in which case the wire carries only ciphertext:
+    the per-bucket row counts ride *inside* the sealed payload so even
+    the key-distribution metadata stays hidden.
+
+    Returns ``(inbox, counts, ok)``: ``inbox[j, i]`` = (cap, ...) bucket
+    worker j received from i, ``counts[j, i]`` its valid-row count, and
+    ``ok`` the per-block MAC verdicts (all-true when unsealed).
+    """
+    from repro.core.router import shuffle_by_key  # lazy: router imports us
+
+    W = int(mesh.shape[axis])
+    if x.shape[0] != W or row_keys.shape[:2] != x.shape[:2]:
+        raise ValueError(f"expected x (W={W}, n, ...) and matching keys; "
+                         f"got {x.shape} / {row_keys.shape}")
+
+    # shard-local bucketing (eager vmap over the worker dim — on a real
+    # mesh this is each shard's local prologue; only the exchange below
+    # is a collective program)
+    def bucket(xb, kb):  # (n, ...), (n,)
+        dest = _consistent_hash(kb) if hash_keys else kb.astype(U32)
+        dest = (dest % U32(W)).astype(jnp.int32)
+        return shuffle_by_key(xb, dest, W)
+
+    mailbox, counts = jax.vmap(bucket)(x, row_keys)  # (W,W,cap,...), (W,W)
+
+    if key is None:
+        inbox = exchange(mailbox, mesh, axis)
+        counts_in = exchange(counts[..., None].astype(jnp.int32), mesh,
+                             axis)[..., 0]
+        return inbox, counts_in, jnp.ones((W, W), bool)
+
+    # sealed path: pack each bucket and its row count into ONE payload so
+    # a single (key, step, src, dst) counter covers both — nothing about
+    # the key distribution crosses the wire in cleartext.
+    if x.dtype.itemsize != 4:
+        raise ValueError(f"keyed_route needs a 4-byte dtype, got {x.dtype}")
+    data = mailbox.reshape(W, W, -1)
+    data_words = data if x.dtype == jnp.uint32 else \
+        jax.lax.bitcast_convert_type(data, jnp.uint32)
+    payload = jnp.concatenate(
+        [data_words, counts[..., None].astype(jnp.uint32)], axis=-1)
+    inbox_words, ok = secure_exchange(payload, mesh, axis, key=key, step=step)
+    counts_in = inbox_words[..., -1].astype(jnp.int32)
+    dw = inbox_words[..., :-1]
+    inbox = (dw if x.dtype == jnp.uint32 else
+             jax.lax.bitcast_convert_type(dw, x.dtype)
+             ).reshape(mailbox.shape)
+    return inbox, counts_in, ok

@@ -1,0 +1,112 @@
+"""Mesh contexts: logical-axis sharding rules resolved against a mesh.
+
+A :class:`MeshContext` bundles a device mesh with the MaxText-style
+logical-axis rules from :class:`repro.configs.base.ShardingConfig` and is
+the single object the model / optimizer / serving layers take to answer
+"how is this tensor laid out?".  Resolution semantics (``spec_for``):
+
+* each logical dim maps to a tuple of candidate mesh axes, tried in order;
+* axes missing from the mesh are skipped (a single-pod mesh simply ignores
+  the ``pod`` axis in a ``("pod", "data")`` rule);
+* eligible axes are accumulated greedily while their combined size still
+  divides the dim — ``("data", "model")`` over a 16x16 mesh shards a
+  256-row batch 256 ways as the tuple entry ``("data", "model")``;
+* an axis is never used twice within one spec (first dim wins, later dims
+  replicate);
+* if no candidate divides the dim: under ``strict`` (or
+  ``allow_uneven=False``) the dim replicates; otherwise the first free
+  candidate is used anyway and GSPMD pads the ragged shard.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SpecEntry = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass
+class MeshContext:
+    """A mesh plus the logical-axis -> mesh-axis sharding rules.
+
+    Deliberately *not* frozen: callers (dry-run shape overrides, tests)
+    re-point ``rules`` at a per-shape variant of the base rule set.
+    """
+
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+    allow_uneven: bool = True
+
+    # ------------------------------------------------------- introspection
+
+    def axis_size(self, name: str) -> int:
+        """Size of a mesh axis; absent axes count as 1 (unsharded)."""
+        return int(self.mesh.shape.get(name, 1))
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        """The pure data-parallel axes present in this mesh."""
+        return tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+
+    # ---------------------------------------------------------- resolution
+
+    def spec_for(self, dims: Sequence[Optional[str]],
+                 shape: Sequence[int], *, strict: bool = False) -> P:
+        """Resolve logical dim names against the mesh -> ``PartitionSpec``."""
+        assert len(dims) == len(shape), (tuple(dims), tuple(shape))
+        used: set = set()
+        parts = [self._resolve_dim(name, int(dim), used, strict)
+                 for name, dim in zip(dims, shape)]
+        return P(*parts)
+
+    def _resolve_dim(self, name: Optional[str], dim: int, used: set,
+                     strict: bool) -> SpecEntry:
+        if name is None:
+            return None
+        candidates = self.rules.get(name, ())
+        group: list = []
+        prod = 1
+        for ax in candidates:
+            if ax not in self.mesh.shape or ax in used or ax in group:
+                continue
+            size = self.axis_size(ax)
+            if dim % (prod * size) == 0:
+                group.append(ax)
+                prod *= size
+        if not group and self.allow_uneven and not strict:
+            # divisibility fallback: GSPMD pads the ragged last shard
+            group = [ax for ax in candidates
+                     if ax in self.mesh.shape and ax not in used][:1]
+        if not group:
+            return None
+        used.update(group)
+        return group[0] if len(group) == 1 else tuple(group)
+
+    # --------------------------------------------------------- conveniences
+
+    def sharding(self, dims: Sequence[Optional[str]],
+                 shape: Sequence[int], *, strict: bool = False
+                 ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(dims, shape,
+                                                      strict=strict))
+
+    def constrain(self, x: jax.Array,
+                  dims: Sequence[Optional[str]]) -> jax.Array:
+        """``with_sharding_constraint`` by logical dim names (jit or eager)."""
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(dims, x.shape))
+
+
+def local_mesh_context(n_devices: int = 0, rules=None,
+                       allow_uneven: bool = True) -> MeshContext:
+    """A smoke-mesh context over whatever devices exist (tests/examples)."""
+    from repro.configs.base import ShardingConfig
+    from repro.launch.mesh import make_smoke_mesh
+
+    if rules is None:
+        rules = ShardingConfig().lookup()
+    return MeshContext(mesh=make_smoke_mesh(n_devices), rules=dict(rules),
+                       allow_uneven=allow_uneven)

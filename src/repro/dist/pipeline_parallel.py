@@ -1,0 +1,109 @@
+"""GPipe-style pipeline parallelism with AEAD-sealed stage boundaries.
+
+The paper encrypts every inter-worker stream; for model pipeline
+parallelism the analogous wire is the activation crossing a stage
+boundary.  ``pipeline_apply`` runs the classic GPipe schedule — S stages,
+M microbatches, M+S-1 ticks, microbatch m entering stage s at tick m+s —
+and seals every stage->stage hand-off with
+:func:`repro.core.secure_channel.protect` / ``unprotect`` (ChaCha20-CTR +
+CW-MAC), so a tampered activation is detected at the receiving stage.
+
+This module is the *schedule* reference: stages execute in tick order in
+one program, which is exact on any device count (tests run it on 1 CPU
+device).  On a real ``("stage",)`` mesh the same tick loop lowers onto
+:func:`repro.core.secure_channel.sealed_ppermute` — ciphertext on the ICI
+wire — which shares the per-edge keys derived here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.secure_channel import protect, unprotect
+from repro.crypto.keys import StageKey, derive_stage_key, root_key_from_seed
+
+
+class PipelineMACError(RuntimeError):
+    """A sealed stage-boundary activation failed its MAC check."""
+
+
+def gpipe_schedule(num_stages: int,
+                   num_microbatches: int) -> List[List[Tuple[int, int]]]:
+    """The GPipe tick table: ``ticks[t]`` lists active ``(stage, mb)``.
+
+    M + S - 1 ticks; microbatch m occupies stage s at tick m + s.  The
+    bubble fraction is the classic (S-1)/(M+S-1).
+    """
+    S, M = num_stages, num_microbatches
+    return [[(s, t - s) for s in range(S) if 0 <= t - s < M]
+            for t in range(M + S - 1)]
+
+
+def edge_keys(num_stages: int, *, seed: int = 0,
+              label: str = "pp") -> List[StageKey]:
+    """One session key per stage boundary; ``keys[s]`` seals the edge
+    *into* stage s (``keys[0]`` is unused — stage 0 reads the source)."""
+    root = root_key_from_seed(seed)
+    return [derive_stage_key(root, f"{label}-edge{s}", s)
+            for s in range(num_stages)]
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                   stage_weights: jax.Array,
+                   microbatches: jax.Array,
+                   mesh: Optional[jax.sharding.Mesh] = None, *,
+                   axis: str = "stage",
+                   seal: bool = True,
+                   key_seed: int = 0,
+                   step: int = 0) -> jax.Array:
+    """Apply an S-stage pipeline to M microbatches on the GPipe schedule.
+
+    ``stage_weights``: (S, ...) — stage s computes
+    ``stage_fn(stage_weights[s], x)``.  ``microbatches``: (M, ...) enter
+    stage 0 in order; returns the (M, ...) stack of stage S-1 outputs,
+    bitwise equal to sequentially chaining the stages per microbatch
+    (sealing is an exact XOR-stream roundtrip).
+
+    Edge counters are ``step * M + microbatch``: a caller invoking this
+    repeatedly under the same ``key_seed`` (e.g. once per training step)
+    MUST pass a distinct ``step`` each time, or every invocation reuses
+    the per-edge (key, nonce) pairs — a two-time pad on the activations.
+
+    When ``mesh`` carries an ``axis`` axis of size > 1 it must equal S
+    (one stage per shard); the schedule itself is device-count agnostic.
+    """
+    S = int(stage_weights.shape[0])
+    M = int(microbatches.shape[0])
+    if mesh is not None and axis in mesh.shape:
+        n = int(mesh.shape[axis])
+        if n > 1 and n != S:
+            raise ValueError(
+                f"mesh axis {axis!r} has size {n} but there are {S} stages")
+    keys = edge_keys(S, seed=key_seed) if seal else None
+
+    outs: List[Optional[jax.Array]] = [None] * M
+    # inflight[s]: the (sealed) activation entering stage s next tick.
+    inflight: dict = {}
+    for tick in gpipe_schedule(S, M):
+        nxt: dict = {}
+        for s, mb in tick:
+            if s == 0:
+                x = microbatches[mb]
+            elif seal:
+                ct, tag, meta = inflight[s]
+                x, ok = unprotect(keys[s], step * M + mb, ct, tag, meta)
+                if not bool(ok):
+                    raise PipelineMACError(
+                        f"MAC failure on edge into stage {s}, microbatch {mb}")
+            else:
+                x = inflight[s]
+            y = stage_fn(stage_weights[s], x)
+            if s == S - 1:
+                outs[mb] = y
+            else:
+                nxt[s + 1] = protect(keys[s + 1], step * M + mb, y) \
+                    if seal else y
+        inflight = nxt
+    return jnp.stack(outs)

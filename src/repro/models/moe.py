@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.dist.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.dist.meshctx import MeshContext

@@ -1,0 +1,65 @@
+"""Deterministic stand-in for `hypothesis` on containers that lack it.
+
+Implements just the surface these tests use — ``given``, ``settings``,
+``strategies.integers/sampled_from/booleans`` — by drawing
+``max_examples`` pseudo-random example tuples from a fixed seed.  No
+shrinking, no database; failures report the drawn example in the assert
+traceback.  If real hypothesis is installed the test modules import it
+instead, so this file is only ever loaded as a fallback.
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self.draw = draw
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(lo, hi))
+
+
+def _sampled_from(items) -> _Strategy:
+    items = list(items)
+    return _Strategy(lambda r: r.choice(items))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda r: r.choice([False, True]))
+
+
+strategies = SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                             booleans=_booleans)
+
+
+class settings:
+    """Decorator-compatible subset: only max_examples is honored."""
+
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # deliberately NOT functools.wraps: the wrapper must expose a
+        # zero-arg signature so pytest doesn't treat the strategy params
+        # as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(*[s.draw(rng) for s in strats])
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: use the fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import get_model_config, reduce_for_smoke
 from repro.dist.meshctx import local_mesh_context
