@@ -1,0 +1,93 @@
+"""AEAD fast-path benchmarks (ISSUE 2): batched ``seal_many`` vs the
+per-block eager ``vmap(seal)`` it replaced, sealed-vs-plain exchange
+throughput on the bench_dist mailbox shapes, and the shape-keyed compile
+cache (round 2 must be all cache hits).
+
+Rows feed the README "Performance" table and the BENCH_aead.json CI
+artifact (``python -m benchmarks.run --only aead --json``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.crypto import aead
+from repro.crypto.keys import derive_stage_key, root_key_from_seed
+from repro.dist import collectives
+from repro.launch.mesh import make_smoke_mesh
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # --- batched seal_many vs per-block eager vmap(seal) --------------------
+    # the bench_dist mailbox shape: W² blocks of nb 16-word cipher blocks
+    mesh = make_smoke_mesh()
+    axis = "model"
+    Wm = int(mesh.shape[axis])
+    nb = 64 if quick else 256
+    B, n_words = Wm * Wm, nb * 16
+    kw = jnp.asarray(rng.integers(0, 2 ** 32, 8, dtype=np.uint32))
+    nonces = jnp.asarray(rng.integers(0, 2 ** 32, (B, 3), dtype=np.uint32))
+    words = jnp.asarray(rng.integers(0, 2 ** 32, (B, n_words),
+                                     dtype=np.uint32))
+    mbytes = B * n_words * 4 / 1e6
+
+    us_eager = time_fn(
+        lambda: jax.vmap(aead.seal, in_axes=(None, 0, 0))(kw, nonces, words),
+        warmup=1, iters=3)
+    rows.append((f"aead.seal.vmap_eager.B{B}.n{n_words}", us_eager,
+                 f"MB_per_s={mbytes / (us_eager / 1e6):.1f}"))
+
+    for backend in ("pallas", "jnp"):
+        us = time_fn(lambda: aead.seal_many(kw, nonces, words,
+                                            backend=backend),
+                     warmup=2, iters=5)
+        rows.append((f"aead.seal_many.{backend}.B{B}.n{n_words}", us,
+                     f"MB_per_s={mbytes / (us / 1e6):.1f}"
+                     f";speedup_vs_eager={us_eager / us:.1f}x"))
+
+    ct, tags = aead.seal_many(kw, nonces, words)
+    us = time_fn(lambda: aead.open_many(kw, nonces, ct, tags),
+                 warmup=2, iters=5)
+    rows.append((f"aead.open_many.pallas.B{B}.n{n_words}", us,
+                 f"MB_per_s={mbytes / (us / 1e6):.1f}"))
+
+    # --- compile cache: round 2 of a fresh shape must be all hits -----------
+    aead.reset_fastpath_cache()
+    fresh = jnp.asarray(rng.integers(0, 2 ** 32, (B, n_words + 16),
+                                     dtype=np.uint32))
+    aead.seal_many(kw, nonces, fresh)           # round 1: compiles
+    s0 = aead.fastpath_stats()
+    aead.seal_many(kw, nonces, fresh)           # round 2: hits
+    s1 = aead.fastpath_stats()
+    rows.append(("aead.compile_cache.round2", 0.0,
+                 f"compiles={s1['compiles']};hits={s1['hits']};"
+                 f"round2_compiled={int(s1['compiles'] != s0['compiles'])}"))
+
+    # --- sealed vs plain exchange throughput (mailbox all_to_all) -----------
+    nbx = 256 if quick else 1024
+    x = jax.random.normal(jax.random.key(2), (Wm, Wm, nbx, 16), jnp.float32)
+    skey = derive_stage_key(root_key_from_seed(0), "bench-aead", 0)
+    xbytes = x.size * 4 / 1e6
+
+    us_plain = time_fn(lambda: collectives.exchange(x, mesh, axis),
+                       warmup=1, iters=3)
+    rows.append((f"aead.exchange.plain.W{Wm}", us_plain,
+                 f"MB_per_s={xbytes / (us_plain / 1e6):.1f}"))
+
+    warmup, iters = 1, 3
+    c0 = collectives.exchange_call_count()
+    us_sealed = time_fn(
+        lambda: collectives.secure_exchange(x, mesh, axis, key=skey,
+                                            step=0)[0],
+        warmup=warmup, iters=iters)
+    calls = collectives.exchange_call_count() - c0
+    rows.append((f"aead.exchange.sealed.W{Wm}", us_sealed,
+                 f"MB_per_s={xbytes / (us_sealed / 1e6):.1f}"
+                 f";collectives_per_round={calls / (warmup + iters):.0f}"
+                 f";sealed_over_plain={us_sealed / us_plain:.1f}x"))
+    return rows

@@ -1,11 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
-Output: CSV rows ``name,us_per_call,derived``.
+                                               [--json [PATH]]
+Output: CSV rows ``name,us_per_call,derived``; with ``--json`` also a
+machine-readable ``BENCH_<name>.json`` artifact for the CI perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import traceback
 
@@ -19,6 +23,7 @@ MODULES = [
     ("scaling_stages", "benchmarks.bench_scaling_stages"),    # Fig. 7
     ("scaling_mappers", "benchmarks.bench_scaling_mappers"),  # Fig. 8
     ("dist", "benchmarks.bench_dist"),                   # repro.dist layer
+    ("aead", "benchmarks.bench_aead"),                   # ISSUE 2 fast path
     ("loc", "benchmarks.bench_loc"),                     # Table 1
     ("kernels", "benchmarks.bench_kernels"),             # beyond-paper
     ("roofline", "benchmarks.bench_roofline"),           # §Roofline table
@@ -31,20 +36,43 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="alias for --quick (CI smoke pass)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--skip", default=None,
+                    help="comma-separated module names to skip")
+    ap.add_argument("--json", nargs="?", const="auto", default=None,
+                    metavar="PATH",
+                    help="also write a JSON artifact (default path "
+                         "BENCH_<only|all>.json)")
     args = ap.parse_args()
     args.quick = args.quick or args.smoke
     print("name,us_per_call,derived")
     failed = 0
+    collected = []
+    skips = set((args.skip or "").split(","))
     for name, mod in MODULES:
         if args.only and args.only != name:
             continue
+        if name in skips:
+            continue
         try:
             m = __import__(mod, fromlist=["run"])
-            emit(m.run(quick=args.quick))
+            rows = m.run(quick=args.quick)
+            emit(rows)
+            collected += [{"bench": name, "name": r[0], "us_per_call": r[1],
+                           "derived": r[2]} for r in rows]
         except Exception:
             failed += 1
             print(f"{name},0.0,BENCH-ERROR", file=sys.stdout)
             traceback.print_exc()
+    if args.json is not None:
+        import jax
+        path = args.json if args.json != "auto" else \
+            f"BENCH_{args.only or 'all'}.json"
+        with open(path, "w") as f:
+            json.dump({"rows": collected, "failed": failed,
+                       "quick": bool(args.quick),
+                       "backend": jax.default_backend(),
+                       "python": platform.python_version()}, f, indent=1)
+        print(f"# wrote {path} ({len(collected)} rows)", file=sys.stderr)
     if failed:
         raise SystemExit(f"{failed} benchmark modules failed")
 

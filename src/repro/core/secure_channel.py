@@ -4,15 +4,20 @@ The paper encrypts every stream between workers (SSL + enclave re-keying).
 For model pipeline parallelism the analogous boundary is the activation
 tensor crossing a stage boundary over ICI/DCN: ``protect`` seals it under
 the edge key before the collective permute, ``unprotect`` opens it on the
-receiving stage.  Because ChaCha20-CTR is a pure XOR stream and the CW-MAC
-is jnp math, both compose with jit/shard_map and cost one elementwise pass.
+receiving stage.  Sealing runs through the batched AEAD fast path
+(:func:`repro.crypto.aead.seal_many`): one compiled program per activation
+shape, held in a shape-keyed cache, so the per-tick cost after warmup is a
+single elementwise pass.  ``protect_many``/``unprotect_many`` seal B
+same-shape activations (e.g. every stage hand-off of one GPipe tick) under
+B independent edge keys in one program.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.crypto import aead
 from repro.crypto.keys import StageKey
@@ -22,17 +27,46 @@ def protect(key: StageKey, step: int, x: jax.Array
             ) -> Tuple[jax.Array, jax.Array, Tuple]:
     """Seal a tensor for the wire. Returns (ct_words, tag, meta)."""
     words, meta = aead.tensor_to_words(x)
-    nonce = jnp.asarray(key.nonce(step))
-    ct, tag = aead.seal(jnp.asarray(key.key), nonce, words)
-    return ct, tag, meta
+    ct, tag = aead.seal_many(jnp.asarray(key.key)[None],
+                             jnp.asarray(key.nonce(step))[None],
+                             words[None])
+    return ct[0], tag[0], meta
 
 
 def unprotect(key: StageKey, step: int, ct: jax.Array, tag: jax.Array,
               meta: Tuple) -> Tuple[jax.Array, jax.Array]:
     """Open a sealed tensor. Returns (tensor, ok)."""
-    nonce = jnp.asarray(key.nonce(step))
-    pt, ok = aead.open_(jnp.asarray(key.key), nonce, ct, tag)
-    return aead.words_to_tensor(pt, meta), ok
+    pt, ok = aead.open_many(jnp.asarray(key.key)[None],
+                            jnp.asarray(key.nonce(step))[None],
+                            ct[None], tag[None])
+    return aead.words_to_tensor(pt[0], meta), ok[0]
+
+
+def protect_many(keys: Sequence[StageKey], steps: Sequence[int],
+                 xs: jax.Array) -> Tuple[jax.Array, jax.Array, Tuple]:
+    """Seal B same-shape tensors under B edge keys in ONE program.
+
+    ``xs``: (B, *item) stacked activations; ``keys``/``steps``: length-B.
+    Returns (ct (B, n_words), tags (B, 2), meta) with ``meta`` shared by
+    every item (same shape/dtype framing).
+    """
+    words, meta = aead.tensor_to_words_batch(xs)
+    kb = jnp.asarray(np.stack([np.asarray(k.key) for k in keys]))
+    nb = jnp.asarray(np.stack([np.asarray(k.nonce(s))
+                               for k, s in zip(keys, steps)]))
+    ct, tags = aead.seal_many(kb, nb, words)
+    return ct, tags, meta
+
+
+def unprotect_many(keys: Sequence[StageKey], steps: Sequence[int],
+                   cts: jax.Array, tags: jax.Array, meta: Tuple
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Open B sealed tensors in ONE program. Returns ((B, *item), ok (B,))."""
+    kb = jnp.asarray(np.stack([np.asarray(k.key) for k in keys]))
+    nb = jnp.asarray(np.stack([np.asarray(k.nonce(s))
+                               for k, s in zip(keys, steps)]))
+    pt, ok = aead.open_many(kb, nb, cts, tags)
+    return aead.words_to_tensor_batch(pt, meta), ok
 
 
 def sealed_ppermute(key: StageKey, step: int, x: jax.Array, axis: str,
@@ -41,9 +75,31 @@ def sealed_ppermute(key: StageKey, step: int, x: jax.Array, axis: str,
 
     The wire (ICI) carries ciphertext; each stage re-opens locally.
     Returns (tensor, ok). Usable only where shapes are uniform across the
-    permuted axis (pipeline microbatches are).
+    permuted axis (pipeline microbatches are).  Ciphertext and tag ride a
+    single packed payload, so each call is ONE collective.
+
+    Every shard of ``axis`` seals a *different* plaintext under the same
+    (key, step), so the sender's shard index is mixed into nonce word 0 —
+    otherwise all shards would share one ChaCha20 keystream and XORing two
+    wire ciphertexts would leak ``x_i ^ x_j`` (a two-time pad).  The
+    receiver re-derives the sender's index from the static ``perm``.
     """
-    ct, tag, meta = protect(key, step, x)
-    ct_r = jax.lax.ppermute(ct, axis, perm)
-    tag_r = jax.lax.ppermute(tag, axis, perm)
-    return unprotect(key, step, ct_r, tag_r, meta)
+    words, meta = aead.tensor_to_words(x)
+    me = jax.lax.axis_index(axis).astype(jnp.uint32)
+    base = jnp.asarray(key.nonce(step), jnp.uint32)
+    kw = jnp.asarray(key.key)[None]
+    ct, tag = aead.seal_many(kw, base.at[0].set(me)[None], words[None])
+
+    payload = jnp.concatenate([ct[0], tag[0]])
+    payload_r = jax.lax.ppermute(payload, axis, perm)
+
+    # src_for[dst] = src for each (src, dst) in perm; shards that receive
+    # nothing get themselves (ppermute left zeros there — the MAC rejects)
+    n = max((max(int(s), int(d)) for s, d in perm), default=0) + 1
+    src_for = np.arange(n, dtype=np.uint32)
+    for s, d in perm:
+        src_for[int(d)] = int(s)
+    sender = jnp.asarray(src_for)[jnp.minimum(me, np.uint32(n - 1))]
+    pt, ok = aead.open_many(kw, base.at[0].set(sender)[None],
+                            payload_r[:-2][None], payload_r[-2:][None])
+    return aead.words_to_tensor(pt[0], meta), ok[0]

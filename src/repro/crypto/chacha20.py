@@ -40,6 +40,46 @@ def _quarter(state, a, b, c, d):
     state[a], state[b], state[c], state[d] = sa, sb, sc, sd
 
 
+def chacha20_block_rows(key: jax.Array, nonces: jax.Array,
+                        counters: jax.Array) -> jax.Array:
+    """Keystream blocks with an independent (nonce, counter) per row.
+
+    key: (8,) u32 shared, or (N, 8) u32 per-row keys; nonces: (N, 3) u32;
+    counters: (N,) u32.  Returns (N, 16) u32 keystream.  This is the
+    primitive behind the batched AEAD fast path: one invocation covers
+    every (batch item, counter) pair of a whole seal/open batch.
+    """
+    N = counters.shape[0]
+    cols = []
+    for i in range(4):
+        cols.append(jnp.broadcast_to(jnp.asarray(CONSTANTS[i], U32), (N,)))
+    for i in range(8):
+        k = key[:, i] if key.ndim == 2 else jnp.broadcast_to(key[i], (N,))
+        cols.append(k.astype(U32))
+    cols.append(counters.astype(U32))
+    for i in range(3):
+        cols.append(nonces[:, i].astype(U32))
+
+    def double_round(_, s):
+        s = list(s)
+        _quarter(s, 0, 4, 8, 12)
+        _quarter(s, 1, 5, 9, 13)
+        _quarter(s, 2, 6, 10, 14)
+        _quarter(s, 3, 7, 11, 15)
+        _quarter(s, 0, 5, 10, 15)
+        _quarter(s, 1, 6, 11, 12)
+        _quarter(s, 2, 7, 8, 13)
+        _quarter(s, 3, 4, 9, 14)
+        return tuple(s)
+
+    # rolled loop (not unrolled): a 10x smaller XLA graph compiles ~10x
+    # faster, which is what makes the shape-keyed compile cache affordable
+    state = jax.lax.fori_loop(0, 10, double_round, tuple(cols))
+
+    out = [s + c for s, c in zip(state, cols)]
+    return jnp.stack(out, axis=-1)  # (N, 16)
+
+
 def chacha20_block(key: jax.Array, nonce: jax.Array,
                    counters: jax.Array) -> jax.Array:
     """Keystream blocks.
@@ -48,28 +88,8 @@ def chacha20_block(key: jax.Array, nonce: jax.Array,
     Returns (N, 16) u32 keystream.
     """
     N = counters.shape[0]
-    cols = []
-    for i in range(4):
-        cols.append(jnp.broadcast_to(jnp.asarray(CONSTANTS[i], U32), (N,)))
-    for i in range(8):
-        cols.append(jnp.broadcast_to(key[i].astype(U32), (N,)))
-    cols.append(counters.astype(U32))
-    for i in range(3):
-        cols.append(jnp.broadcast_to(nonce[i].astype(U32), (N,)))
-    state = list(cols)
-
-    for _ in range(10):  # 10 double rounds = 20 rounds
-        _quarter(state, 0, 4, 8, 12)
-        _quarter(state, 1, 5, 9, 13)
-        _quarter(state, 2, 6, 10, 14)
-        _quarter(state, 3, 7, 11, 15)
-        _quarter(state, 0, 5, 10, 15)
-        _quarter(state, 1, 6, 11, 12)
-        _quarter(state, 2, 7, 8, 13)
-        _quarter(state, 3, 4, 9, 14)
-
-    out = [s + c for s, c in zip(state, cols)]
-    return jnp.stack(out, axis=-1)  # (N, 16)
+    nonces = jnp.broadcast_to(jnp.asarray(nonce, U32)[None, :], (N, 3))
+    return chacha20_block_rows(key, nonces, counters)
 
 
 def keystream(key: jax.Array, nonce: jax.Array, n_words: int,

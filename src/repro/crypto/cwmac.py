@@ -102,6 +102,60 @@ def mac2(words: jax.Array, r1: jax.Array, s1: jax.Array,
     return jnp.stack([mac(words, r1, s1), mac(words, r2, s2)])
 
 
+# ---------------------------------------------------------------------------
+# batched forms (B independent messages / keys in one program)
+# ---------------------------------------------------------------------------
+
+
+def to_limbs_batch(words: jax.Array) -> jax.Array:
+    """(B, N) uint32 -> (B, 2N) 16-bit limbs, per-row layout of _to_limbs."""
+    lo = words & np.uint32(0xFFFF)
+    hi = words >> np.uint32(16)
+    return jnp.stack([lo, hi], axis=-1).reshape(words.shape[0], -1)
+
+
+def r_powers_batch(r: jax.Array, n: int) -> jax.Array:
+    """Per-row [r_b^n .. r_b^1]: (B,) keys -> (B, n) powers, log-doubling."""
+    asc = jnp.asarray(r, U32).reshape(-1, 1)
+    while asc.shape[1] < n:
+        asc = jnp.concatenate([asc, mulmod(asc, asc[:, -1:])], axis=1)
+    return asc[:, :n][:, ::-1]
+
+
+def mac_batch(words: jax.Array, r: jax.Array, s: jax.Array) -> jax.Array:
+    """Row-wise MAC: (B, N) words under (B,) keys -> (B,) tags.
+
+    Same polynomial as :func:`mac`, but the elementwise mulmod and the
+    log-depth add-mod tree run over the whole batch at once — one program
+    MACs every block of a mailbox round.
+    """
+    limbs = to_limbs_batch(words)
+    ps = r_powers_batch(r, limbs.shape[1])
+    acc = mulmod(limbs, ps)
+    while acc.shape[1] > 1:
+        if acc.shape[1] % 2:
+            acc = jnp.concatenate(
+                [acc, jnp.zeros((acc.shape[0], 1), U32)], axis=1)
+        acc = addmod(acc[:, 0::2], acc[:, 1::2])
+    return addmod(acc[:, 0], s)
+
+
+def mac2_batch(words: jax.Array, r1: jax.Array, s1: jax.Array,
+               r2: jax.Array, s2: jax.Array) -> jax.Array:
+    """Row-wise dual-key MAC: (B, N) words -> (B, 2) tags.
+
+    Both evaluations share one kernel pass: the (r1, s1) and (r2, s2) rows
+    are stacked into a single (2B,)-key batch.
+    """
+    B = words.shape[0]
+    tags = mac_batch(jnp.concatenate([words, words]),
+                     jnp.concatenate([jnp.asarray(r1, U32).reshape(-1),
+                                      jnp.asarray(r2, U32).reshape(-1)]),
+                     jnp.concatenate([jnp.asarray(s1, U32).reshape(-1),
+                                      jnp.asarray(s2, U32).reshape(-1)]))
+    return jnp.stack([tags[:B], tags[B:]], axis=-1)
+
+
 def mac_reference(words: np.ndarray, r: int, s: int) -> int:
     """Host-side oracle with Python ints (used by tests)."""
     p = (1 << 31) - 1

@@ -14,7 +14,9 @@ or rounds.
 """
 from __future__ import annotations
 
+import functools
 import math
+from collections import OrderedDict
 from typing import Optional, Tuple
 
 import jax
@@ -28,26 +30,42 @@ from repro.dist.compat import shard_map
 
 U32 = jnp.uint32
 
+_NONCE_CACHE: "OrderedDict[Tuple[int, int], jax.Array]" = OrderedDict()
+_NONCE_CACHE_MAX = 32
+
+
+@functools.lru_cache(maxsize=8)
+def _route_counter_base(W: int) -> np.ndarray:
+    """(W*W,) uint64 ``src*W + dst`` grid — the step-independent part."""
+    src, dst = np.meshgrid(np.arange(W, dtype=np.uint64),
+                           np.arange(W, dtype=np.uint64), indexing="ij")
+    # all-uint64 arithmetic: mixing np.uint64 scalars with Python ints
+    # promotes to float64 under NumPy 1.x value-based casting
+    return (src * np.uint64(W) + dst).reshape(-1)
+
 
 def _route_nonces(W: int, step: int) -> jax.Array:
     """(W*W, 3) nonces for the (src, dst) routing counters of one round.
 
     Counter ``(step*W + src)*W + dst`` is unique per (key, step, src, dst),
-    so no nonce is ever reused across shards or rounds.  Computed host-side
-    (numpy): seal/open run eagerly, mirroring the enclave executor — only
-    the all_to_all itself is a compiled program, and it touches ciphertext
-    exclusively.
+    so no nonce is ever reused across shards or rounds.  The host-side
+    numpy grid is cached per W (and the final device array per (W, step)),
+    so repeated rounds pay no reconstruction cost.
     """
-    src, dst = np.meshgrid(np.arange(W, dtype=np.uint64),
-                           np.arange(W, dtype=np.uint64), indexing="ij")
-    # all-uint64 arithmetic: mixing np.uint64 scalars with Python ints
-    # promotes to float64 under NumPy 1.x value-based casting
-    W64 = np.uint64(W)
-    c = (np.uint64(step) * W64 + src) * W64 + dst
-    return jnp.asarray(np.stack([np.zeros_like(c),
-                                 c & np.uint64(0xFFFFFFFF),
-                                 c >> np.uint64(32)],
-                                axis=-1).reshape(W * W, 3).astype(np.uint32))
+    ck = (W, int(step))
+    hit = _NONCE_CACHE.get(ck)
+    if hit is not None:
+        _NONCE_CACHE.move_to_end(ck)
+        return hit
+    c = np.uint64(step) * np.uint64(W) * np.uint64(W) + _route_counter_base(W)
+    out = jnp.asarray(np.stack([np.zeros_like(c),
+                                c & np.uint64(0xFFFFFFFF),
+                                c >> np.uint64(32)],
+                               axis=-1).astype(np.uint32))
+    _NONCE_CACHE[ck] = out
+    while len(_NONCE_CACHE) > _NONCE_CACHE_MAX:
+        _NONCE_CACHE.popitem(last=False)
+    return out
 
 
 def _mailbox_spec(ndim: int, axis: str) -> P:
@@ -61,8 +79,19 @@ def _check_mailbox(x: jax.Array, W: int) -> None:
             f"got {x.shape}")
 
 
+_EXCHANGE_CALLS = 0
+
+
+def exchange_call_count() -> int:
+    """Total :func:`exchange` collectives issued (tests/benchmarks assert
+    the sealed path costs exactly ONE collective per round)."""
+    return _EXCHANGE_CALLS
+
+
 def exchange(x: jax.Array, mesh, axis: str = "model") -> jax.Array:
     """Plain all_to_all of mailbox blocks: ``y[j, i] = x[i, j]``."""
+    global _EXCHANGE_CALLS
+    _EXCHANGE_CALLS += 1
     W = int(mesh.shape[axis])
     _check_mailbox(x, W)
     spec = _mailbox_spec(x.ndim, axis)
@@ -87,10 +116,12 @@ def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
     bitcast).  Returns ``(y, ok)`` with ``y[j, i]`` the opened block
     worker j received from i and ``ok[j, i]`` its MAC verdict.
 
-    Seal/open execute eagerly shard-side (the enclave-executor idiom —
-    jitting ChaCha20 costs minutes of XLA compile for zero reuse); the
-    compiled collective program only ever sees ciphertext, which is the
-    security boundary that matters.
+    All W² blocks are sealed by ONE compiled :func:`repro.crypto.aead.
+    seal_many` program (shape-keyed compile cache: every round reuses the
+    same (W², n_words) signature, so the compile amortizes across rounds),
+    and the ciphertext + tags are packed into a single sealed payload so
+    each round issues exactly ONE :func:`exchange` collective.  The wire
+    still only ever carries ciphertext and MAC tags.
     """
     if step is None:
         raise ValueError(
@@ -108,17 +139,16 @@ def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
     words = flat if x.dtype == jnp.uint32 else \
         jax.lax.bitcast_convert_type(flat, jnp.uint32)
     nonces = _route_nonces(W, step)                       # (W*W, 3) [src, dst]
-    ct, tags = jax.vmap(aead.seal, in_axes=(None, 0, 0))(kw, nonces, words)
+    ct, tags = aead.seal_many(kw, nonces, words)          # one program
 
-    # only ciphertext and tags cross the wire
-    ct_r = exchange(ct.reshape(W, W, n_words), mesh, axis)
-    tag_r = exchange(tags.reshape(W, W, 2), mesh, axis)
+    # pack ciphertext + tags into one payload: ONE collective per round
+    payload = jnp.concatenate([ct, tags], axis=-1).reshape(W, W, n_words + 2)
+    payload_r = exchange(payload, mesh, axis).reshape(W * W, n_words + 2)
 
     # inbox[dst, src] was sealed with the (src, dst) counter
     nonces_in = nonces.reshape(W, W, 3).swapaxes(0, 1).reshape(W * W, 3)
-    pt, ok = jax.vmap(aead.open_, in_axes=(None, 0, 0, 0))(
-        kw, nonces_in, ct_r.reshape(W * W, n_words),
-        tag_r.reshape(W * W, 2))
+    pt, ok = aead.open_many(kw, nonces_in, payload_r[:, :n_words],
+                            payload_r[:, n_words:])
     out = pt if x.dtype == jnp.uint32 else \
         jax.lax.bitcast_convert_type(pt, x.dtype)
     return out.reshape(W, W, *blk_shape), ok.reshape(W, W)

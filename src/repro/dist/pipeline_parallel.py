@@ -13,6 +13,13 @@ one program, which is exact on any device count (tests run it on 1 CPU
 device).  On a real ``("stage",)`` mesh the same tick loop lowers onto
 :func:`repro.core.secure_channel.sealed_ppermute` — ciphertext on the ICI
 wire — which shares the per-edge keys derived here.
+
+Sealing rides the batched AEAD fast path: every stage->stage hand-off of a
+tick is sealed by ONE :func:`repro.core.secure_channel.protect_many`
+program (per-edge keys batched), and every sealed inflow of the next tick
+is opened by one ``unprotect_many`` — the activation shapes repeat across
+ticks, so the shape-keyed compile cache makes each tick a cache hit after
+the first.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ from typing import Any, Callable, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.secure_channel import protect, unprotect
+from repro.core.secure_channel import protect_many, unprotect_many
 from repro.crypto.keys import StageKey, derive_stage_key, root_key_from_seed
 
 
@@ -87,23 +94,60 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
     # inflight[s]: the (sealed) activation entering stage s next tick.
     inflight: dict = {}
     for tick in gpipe_schedule(S, M):
-        nxt: dict = {}
+        # open every sealed inflow of this tick in ONE batched program
+        # (grouped by activation shape; shape-preserving stage_fns — the
+        # common case — yield a single group per tick)
+        opened: dict = {}
+        if seal:
+            groups: dict = {}
+            for s, mb in tick:
+                if s > 0:
+                    ct, _, meta = inflight[s]
+                    groups.setdefault((ct.shape, meta), []).append((s, mb))
+            for (_, meta), members in groups.items():
+                cts = jnp.stack([inflight[s][0] for s, _ in members])
+                tags = jnp.stack([inflight[s][1] for s, _ in members])
+                xs, oks = unprotect_many(
+                    [keys[s] for s, _ in members],
+                    [step * M + mb for _, mb in members], cts, tags, meta)
+                for i, (s, mb) in enumerate(members):
+                    if not bool(oks[i]):
+                        raise PipelineMACError(
+                            f"MAC failure on edge into stage {s}, "
+                            f"microbatch {mb}")
+                    opened[s] = xs[i]
+
+        sends: List[Tuple[int, int, jax.Array]] = []  # (stage, mb, act)
         for s, mb in tick:
             if s == 0:
                 x = microbatches[mb]
             elif seal:
-                ct, tag, meta = inflight[s]
-                x, ok = unprotect(keys[s], step * M + mb, ct, tag, meta)
-                if not bool(ok):
-                    raise PipelineMACError(
-                        f"MAC failure on edge into stage {s}, microbatch {mb}")
+                x = opened[s]
             else:
                 x = inflight[s]
             y = stage_fn(stage_weights[s], x)
             if s == S - 1:
                 outs[mb] = y
             else:
-                nxt[s + 1] = protect(keys[s + 1], step * M + mb, y) \
-                    if seal else y
+                sends.append((s + 1, mb, y))
+
+        # seal every hand-off of this tick in ONE batched program per
+        # activation shape (one group when stage_fn preserves shape)
+        nxt: dict = {}
+        if seal and sends:
+            out_groups: dict = {}
+            for s, mb, y in sends:
+                out_groups.setdefault((y.shape, str(y.dtype)),
+                                      []).append((s, mb, y))
+            for members in out_groups.values():
+                cts, tags, meta = protect_many(
+                    [keys[s] for s, _, _ in members],
+                    [step * M + mb for _, mb, _ in members],
+                    jnp.stack([y for _, _, y in members]))
+                for i, (s, _, _) in enumerate(members):
+                    nxt[s] = (cts[i], tags[i], meta)
+        else:
+            for s, _, y in sends:
+                nxt[s] = y
         inflight = nxt
     return jnp.stack(outs)

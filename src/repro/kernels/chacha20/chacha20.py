@@ -34,6 +34,46 @@ def _chacha_kernel(key_ref, nonce_ref, ctr_ref, data_ref, out_ref, *,
     out_ref[...] = data ^ ks_mat
 
 
+def _chacha_rows_kernel(key_ref, nonce_ref, ctr_ref, data_ref, out_ref):
+    """Per-row (key, nonce, counter) tile: the batched-AEAD fast path.
+
+    Every VMEM row is one cipher block with its own key/nonce/counter
+    column vectors, so a whole (batch, counters 0..N) seal batch is a
+    single grid sweep — no per-item dispatch.
+    """
+    key = [key_ref[:, i] for i in range(8)]       # 8 x (rows,)
+    nonce = [nonce_ref[:, i] for i in range(3)]   # 3 x (rows,)
+    counters = ctr_ref[...]                       # (rows,)
+    ks = keystream_vectors(key, nonce, counters)  # 16 x (rows,)
+    out_ref[...] = data_ref[...] ^ jnp.stack(ks, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def chacha20_xor_rows(keys: jax.Array, nonces: jax.Array, counters: jax.Array,
+                      data_rows: jax.Array, *, block_rows: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """XOR (R, 16) u32 rows with per-row keystream blocks.
+
+    keys: (R, 8); nonces: (R, 3); counters: (R,).  R % block_rows == 0.
+    """
+    R = data_rows.shape[0]
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _chacha_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(data_rows.shape, U32),
+        interpret=interpret,
+    )(keys.astype(U32), nonces.astype(U32), counters.astype(U32), data_rows)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def chacha20_xor_blocks(key: jax.Array, nonce: jax.Array, counter0,
                         data_blocks: jax.Array, *, block_rows: int = 512,

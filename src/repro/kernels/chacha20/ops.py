@@ -8,11 +8,32 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.chacha20.chacha20 import chacha20_xor_blocks
+from repro.kernels.chacha20.chacha20 import chacha20_xor_blocks, \
+    chacha20_xor_rows
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def xor_rows(key, nonces, counters, rows, *, block_rows: int = 256):
+    """Per-row keystream XOR over (R, 16) u32 rows (auto-padded to tiles).
+
+    key: (8,) shared or (R, 8) per-row; nonces: (R, 3); counters: (R,).
+    The padded tail rows use key/nonce/counter zeros and are sliced off.
+    """
+    R = rows.shape[0]
+    keys = key.reshape(1, 8) * jnp.ones((R, 1), jnp.uint32) \
+        if key.ndim == 1 else key
+    pad = (-R) % block_rows
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
+        nonces = jnp.pad(nonces, ((0, pad), (0, 0)))
+        counters = jnp.pad(counters, (0, pad))
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    out = chacha20_xor_rows(keys, nonces, counters, rows,
+                            block_rows=block_rows, interpret=not _on_tpu())
+    return out[:R]
 
 
 def encrypt_words(key, nonce, words, counter0: int = 1, *,

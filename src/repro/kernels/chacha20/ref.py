@@ -12,3 +12,11 @@ def chacha20_xor_blocks_ref(key, nonce, counter0, data_blocks):
     counters = jnp.asarray(counter0, jnp.uint32) + jnp.arange(N, dtype=jnp.uint32)
     ks = _c.chacha20_block(key, nonce, counters)   # (N, 16)
     return data_blocks ^ ks
+
+
+def chacha20_xor_rows_ref(keys, nonces, counters, data_rows):
+    """Oracle for the per-row (key, nonce, counter) fast-path kernel."""
+    keys = jnp.broadcast_to(keys.reshape(1, 8),
+                            (data_rows.shape[0], 8)) \
+        if keys.ndim == 1 else keys
+    return data_rows ^ _c.chacha20_block_rows(keys, nonces, counters)

@@ -56,6 +56,39 @@ def _mac_tile_kernel(limbs_ref, pows_ref, out_ref, *, tile: int):
     out_ref[0] = acc[0]
 
 
+def _mac_tile_batch_kernel(limbs_ref, pows_ref, out_ref, *, tile: int):
+    terms = _mulmod(limbs_ref[0], pows_ref[0])   # (tile,) u32 < p
+    acc = terms
+    n = tile
+    while n > 1:
+        half = n // 2
+        acc = _addmod(acc[:half], acc[half:n])
+        n = half
+    out_ref[0, 0] = acc[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def mac_partials_batch(limbs: jax.Array, powers: jax.Array, *,
+                       tile: int = 4096, interpret: bool = True) -> jax.Array:
+    """Per-row tiled partials: limbs (B, N) u32 < p with N % tile == 0;
+    powers (B, tile) per-row [r_b^TS .. r_b^1].  Returns (B, N/tile)
+    partials — one grid sweep covers every (row, tile) pair."""
+    B, N = limbs.shape
+    assert N % tile == 0 and (tile & (tile - 1)) == 0, (N, tile)
+    grid = (B, N // tile)
+    return pl.pallas_call(
+        functools.partial(_mac_tile_batch_kernel, tile=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda b, t: (b, t)),
+            pl.BlockSpec((1, tile), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, t: (b, t)),
+        out_shape=jax.ShapeDtypeStruct((B, N // tile), U32),
+        interpret=interpret,
+    )(limbs, powers)
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def mac_partials(limbs: jax.Array, powers: jax.Array, *, tile: int = 4096,
                  interpret: bool = True) -> jax.Array:

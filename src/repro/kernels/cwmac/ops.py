@@ -5,14 +5,63 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.crypto.cwmac import _to_limbs, addmod, mulmod, r_powers
-from repro.kernels.cwmac.cwmac import mac_partials
+from repro.crypto.cwmac import _to_limbs, addmod, mulmod, r_powers, \
+    r_powers_batch, to_limbs_batch
+from repro.kernels.cwmac.cwmac import mac_partials, mac_partials_batch
 
 U32 = jnp.uint32
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pick_tile(n_limbs: int, tile: int) -> int:
+    """Largest power-of-two tile <= requested that doesn't over-pad tiny
+    messages (padding is always to a whole number of tiles)."""
+    t = 8
+    while t < tile and t < n_limbs:
+        t *= 2
+    return t
+
+
+def mac_batch(words: jax.Array, r: jax.Array, s: jax.Array, *,
+              tile: int = 4096) -> jax.Array:
+    """Row-wise kernel-tiled MAC: (B, N) words under (B,) keys -> (B,) tags.
+
+    Same factoring as :func:`mac` but the partials kernel sweeps a
+    (B, T) grid, so one launch MACs the whole batch."""
+    limbs = to_limbs_batch(words)
+    B, n = limbs.shape
+    tile = _pick_tile(n, tile)
+    pad = (-n) % tile
+    # front-pad (zero limbs contribute 0) to keep low powers at message end
+    limbs = jnp.concatenate([jnp.zeros((B, pad), U32), limbs], axis=1)
+    T = limbs.shape[1] // tile
+    pows_tile = r_powers_batch(r, tile)                  # (B, tile)
+    partials = mac_partials_batch(limbs, pows_tile, tile=tile,
+                                  interpret=not _on_tpu())  # (B, T)
+    rTS = pows_tile[:, 0]                                # (B,) r^tile
+
+    def step(carry, p_t):   # Horner over tiles, batched carry (B,)
+        return addmod(mulmod(carry, rTS), p_t), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((B,), U32), partials.T)
+    return addmod(acc, jnp.asarray(s, U32))
+
+
+def mac2_batch(words: jax.Array, r1: jax.Array, s1: jax.Array,
+               r2: jax.Array, s2: jax.Array, *,
+               tile: int = 4096) -> jax.Array:
+    """Row-wise dual-key MAC -> (B, 2) tags; both keys ride one launch."""
+    B = words.shape[0]
+    tags = mac_batch(jnp.concatenate([words, words]),
+                     jnp.concatenate([jnp.asarray(r1, U32).reshape(-1),
+                                      jnp.asarray(r2, U32).reshape(-1)]),
+                     jnp.concatenate([jnp.asarray(s1, U32).reshape(-1),
+                                      jnp.asarray(s2, U32).reshape(-1)]),
+                     tile=tile)
+    return jnp.stack([tags[:B], tags[B:]], axis=-1)
 
 
 def mac(words: jax.Array, r: jax.Array, s: jax.Array, *,

@@ -1,3 +1,5 @@
 """Oracle for the CW-MAC kernel: repro.crypto.cwmac.mac (jnp) and the
-python-int Horner reference."""
+python-int Horner reference; batched forms for the AEAD fast path."""
 from repro.crypto.cwmac import mac as mac_ref, mac_reference  # noqa: F401
+from repro.crypto.cwmac import mac_batch as mac_batch_ref  # noqa: F401
+from repro.crypto.cwmac import mac2_batch as mac2_batch_ref  # noqa: F401
