@@ -13,8 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_fn
+from repro.attest.directory import ephemeral_edge_key
 from repro.crypto import aead
-from repro.crypto.keys import derive_stage_key, root_key_from_seed
 from repro.dist import collectives
 from repro.launch.mesh import make_smoke_mesh
 
@@ -71,7 +71,7 @@ def run(quick: bool = False):
     # --- sealed vs plain exchange throughput (mailbox all_to_all) -----------
     nbx = 256 if quick else 1024
     x = jax.random.normal(jax.random.key(2), (Wm, Wm, nbx, 16), jnp.float32)
-    skey = derive_stage_key(root_key_from_seed(0), "bench-aead", 0)
+    skey = ephemeral_edge_key("bench-aead", seed=0)
     xbytes = x.size * 4 / 1e6
 
     us_plain = time_fn(lambda: collectives.exchange(x, mesh, axis),

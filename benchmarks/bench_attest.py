@@ -1,0 +1,89 @@
+"""Attestation & key-lifecycle benchmarks (ISSUE 3).
+
+Control-plane costs of the `repro.attest` subsystem: the quote-checked DH
+handshake (per edge), quote generate+verify alone, the per-epoch rotation
+ratchet across a realistic edge count, and the data-plane question that
+decides whether mid-stream rekeying is affordable — sealed-exchange
+latency when every round flips the epoch vs a steady key (the AEAD
+compile cache is keyed on shapes, not keys, so a flip must not recompile).
+
+Rows feed ``BENCH_attest.json`` (``python -m benchmarks.run --only attest
+--json``), uploaded as a CI artifact next to the AEAD bench.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.attest.directory import KeyDirectory
+from repro.attest.measure import measure_bytes
+from repro.dist import collectives
+from repro.launch.mesh import make_smoke_mesh
+
+
+def _directory_with_edges(n_edges: int, seed: int = 0) -> KeyDirectory:
+    d = KeyDirectory(seed=seed)
+    for s in range(n_edges + 1):
+        d.enroll(f"stage{s}", measure_bytes(b"bench-stage", str(s).encode()),
+                 allow=True)
+    for s in range(n_edges):
+        d.establish(f"edge{s}", f"stage{s}", f"stage{s + 1}", stage_id=s)
+    return d
+
+
+def run(quick: bool = False):
+    rows = []
+
+    # --- handshake latency: quote x2 + verify x2 + DH + transcript KDF ----
+    d = _directory_with_edges(0)
+    d.enroll("hs/a", measure_bytes(b"hs"), allow=True)
+    d.enroll("hs/b", measure_bytes(b"hs"), allow=True)
+    n = [0]
+
+    def handshake():
+        n[0] += 1
+        return d.establish(f"hs-edge{n[0]}", "hs/a", "hs/b")
+
+    us = time_fn(handshake, warmup=1, iters=3 if quick else 7)
+    rows.append(("attest.handshake.establish", us,
+                 f"edges_per_s={1e6 / us:.0f}"))
+
+    # --- quote generate + verify alone (the admission gate) --------------
+    us = time_fn(lambda: d.admit("hs/a"), warmup=2, iters=10)
+    rows.append(("attest.quote.admit", us, f"admits_per_s={1e6 / us:.0f}"))
+
+    # --- rotation: ratchet every edge key + reset counters ----------------
+    E = 8
+    dr = _directory_with_edges(E)
+    us = time_fn(dr.advance_epoch, warmup=1, iters=5 if quick else 20)
+    rows.append((f"attest.rotation.advance_epoch.E{E}", us,
+                 f"us_per_edge={us / E:.1f}"))
+
+    # --- sealed exchange across an epoch flip vs steady key ---------------
+    # same shapes every round -> the AEAD compile cache must hit whether or
+    # not the key rotated; the delta IS the rotation overhead on the wire.
+    mesh = make_smoke_mesh()
+    axis = "model"
+    Wm = int(mesh.shape[axis])
+    nb = 64 if quick else 256
+    x = jax.random.normal(jax.random.key(0), (Wm, Wm, nb, 16), jnp.float32)
+    dx = _directory_with_edges(1, seed=1)
+    h = dx.handle("edge0")
+
+    us_steady = time_fn(
+        lambda: collectives.secure_exchange(x, mesh, axis, key=h)[0],
+        warmup=2, iters=5)
+    rows.append((f"attest.exchange.steady_epoch.W{Wm}", us_steady,
+                 f"MB_per_s={x.size * 4 / us_steady:.1f}"))
+
+    def flip_round():
+        dx.advance_epoch()
+        return collectives.secure_exchange(x, mesh, axis, key=h)[0]
+
+    us_flip = time_fn(flip_round, warmup=2, iters=5)
+    rows.append((f"attest.exchange.epoch_flip.W{Wm}", us_flip,
+                 f"MB_per_s={x.size * 4 / us_flip:.1f}"
+                 f";flip_over_steady={us_flip / us_steady:.2f}x"))
+    return rows

@@ -14,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_fn
+from repro.attest.directory import ephemeral_edge_key
 from repro.core.enclave import EnclaveExecutor, ingress, egress
-from repro.crypto.keys import derive_stage_key, root_key_from_seed
 
 # six workloads (paper: dhrystone, fannkuchredux, nbody, richards,
 # spectralnorm, binarytrees) -> TPU-friendly numeric equivalents with small
@@ -67,9 +67,8 @@ def _compute(kind: str, x: jnp.ndarray) -> jnp.ndarray:
 
 def run(quick: bool = False):
     rows = []
-    root = root_key_from_seed(0)
-    k0 = derive_stage_key(root, "in", 0)
-    k1 = derive_stage_key(root, "out", 1)
+    k0 = ephemeral_edge_key("in", seed=0, stage_id=0)
+    k1 = ephemeral_edge_key("out", seed=0, stage_id=1)
     items = list(WORKLOADS.items())
     if quick:
         items = items[:3]

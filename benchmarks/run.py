@@ -24,6 +24,7 @@ MODULES = [
     ("scaling_mappers", "benchmarks.bench_scaling_mappers"),  # Fig. 8
     ("dist", "benchmarks.bench_dist"),                   # repro.dist layer
     ("aead", "benchmarks.bench_aead"),                   # ISSUE 2 fast path
+    ("attest", "benchmarks.bench_attest"),               # ISSUE 3 lifecycle
     ("loc", "benchmarks.bench_loc"),                     # Table 1
     ("kernels", "benchmarks.bench_kernels"),             # beyond-paper
     ("roofline", "benchmarks.bench_roofline"),           # §Roofline table

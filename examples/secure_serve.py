@@ -1,5 +1,7 @@
-"""Secure serving: batched requests arrive as AEAD-sealed prompt chunks,
-are opened at ingest, prefilled, then decoded greedily with a KV cache.
+"""Secure serving: clients attest to the server, establish a session key
+via the quote-checked handshake (repro.attest), then send AEAD-sealed
+prompt chunks which are opened at ingest, prefilled, and decoded greedily
+with a KV cache.
 
 Run:  PYTHONPATH=src python examples/secure_serve.py --requests 4 --new 16
 """
@@ -10,10 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.attest.directory import KeyDirectory
+from repro.attest.measure import IO_ENDPOINT, measure_bytes
 from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
                                 ShapeConfig)
 from repro.core.enclave import egress, ingress
-from repro.crypto.keys import derive_stage_key, root_key_from_seed
 from repro.dist.meshctx import local_mesh_context
 from repro.models import api
 from repro.serve.engine import make_decode_step
@@ -36,8 +39,17 @@ def main() -> None:
     ctx = local_mesh_context()
     params = api.init_params(cfg, jax.random.key(0))
 
-    # --- sealed request ingestion (clients encrypt prompts to the server)
-    key = derive_stage_key(root_key_from_seed(7), "client-requests", 0)
+    # --- attestation + key establishment (the paper's assumed bootstrap):
+    # the serving enclave is measured and allowlisted; the client verifies
+    # its quote during the handshake and the session key seals requests.
+    directory = KeyDirectory(seed=7)
+    server_m = measure_bytes(b"serve-enclave", cfg.arch_id.encode())
+    directory.enroll("server", server_m, allow=True)
+    directory.enroll("client", IO_ENDPOINT, allow=True)
+    key = directory.establish("client-requests", "client", "server",
+                              stage_id=0)
+    print(f"attested session established (measurement "
+          f"{server_m.hex()[:16]}..., epoch {directory.epoch})")
     rng = np.random.default_rng(0)
     prompts_np = rng.integers(0, cfg.vocab_size,
                               (args.requests, args.prompt_len),

@@ -1,0 +1,295 @@
+"""KeyDirectory: the single owner of live session keys, epochs, counters.
+
+This is the trust-bootstrap layer the paper assumes away ("we assume that
+attestation and key establishment was previously performed", §4).  Every
+sealed path in the repo — `core.secure_channel`, `core.enclave`,
+`dist.collectives`, `dist.pipeline_parallel`, `core.pipeline` — obtains
+its :class:`repro.crypto.keys.StageKey` from a directory edge, never from
+`derive_stage_key` (a grep test enforces this).  The directory:
+
+* enrolls worker identities (id + measurement) and issues/verifies their
+  quotes against a :class:`repro.attest.quote.QuotePolicy`;
+* establishes per-edge session keys via the attested DH handshake
+  (`repro.attest.handshake`) — both endpoints are quote-checked;
+* owns the epoch counter: :meth:`advance_epoch` ratchets every live edge
+  key (`repro.attest.rotation`) and zeroes its chunk counter, keeping a
+  bounded history so in-flight chunks sealed in epoch N still open after
+  the flip to N+1;
+* revokes workers live: :meth:`revoke` quarantines an id (its quotes stop
+  verifying, pools skip it) and tears down any session it terminates.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.attest.handshake import HandshakeEnd, HandshakeError
+from repro.attest.quote import (Quote, QuoteError, QuotePolicy, QuotingKey,
+                                verify_quote)
+from repro.attest.rotation import key_from_bytes, ratchet_key
+from repro.crypto.keys import StageKey
+
+
+class KeyDirectoryError(RuntimeError):
+    pass
+
+
+class NoSessionError(KeyDirectoryError):
+    pass
+
+
+class RevokedWorkerError(KeyDirectoryError):
+    def __init__(self, worker_id: str, detail: str = ""):
+        super().__init__(f"worker {worker_id!r} is revoked"
+                         + (f": {detail}" if detail else ""))
+        self.worker_id = worker_id
+
+
+@dataclass
+class SessionState:
+    """One edge's live session: current key + drainable epoch history."""
+    edge: str
+    left: str                    # worker ids of the two endpoints
+    right: str
+    transcript: bytes
+    epoch: int
+    chunks: int = 0              # sealed-chunk counter, reset per epoch
+    keys: Dict[int, StageKey] = field(default_factory=dict)  # epoch -> key
+
+    def key_at(self, epoch: int) -> StageKey:
+        k = self.keys.get(epoch)
+        if k is None:
+            raise NoSessionError(
+                f"edge {self.edge!r} has no key for epoch {epoch} "
+                f"(live: {sorted(self.keys)}) — drained past history")
+        return k
+
+
+@dataclass
+class EdgeHandle:
+    """A capability-style view of one directory edge, passed to sealing
+    code instead of a raw StageKey so rotation is picked up live."""
+    directory: "KeyDirectory"
+    edge: str
+
+    def key(self, epoch: Optional[int] = None) -> StageKey:
+        return self.directory.edge_key(self.edge, epoch=epoch)
+
+    @property
+    def epoch(self) -> int:
+        return self.directory.session(self.edge).epoch
+
+    def next_counter(self) -> int:
+        return self.directory.next_counter(self.edge)
+
+    def next_counters(self, n: int) -> int:
+        return self.directory.next_counters(self.edge, n)
+
+
+class KeyDirectory:
+    """Attestation verifier + key-establishment service + key store."""
+
+    def __init__(self, seed: int = 0, policy: Optional[QuotePolicy] = None,
+                 *, epoch_history: int = 8):
+        self.seed = seed
+        self.policy = policy if policy is not None else QuotePolicy()
+        self.epoch = 0
+        self.epoch_history = max(1, int(epoch_history))
+        self.clock = 0                       # logical time for quote ages
+        self._qk = QuotingKey.from_seed(seed)
+        self._rng = random.Random(f"repro-attest-{seed}")
+        self._workers: Dict[str, bytes] = {}       # id -> measurement
+        self._sessions: Dict[str, SessionState] = {}
+
+    # ------------------------------------------------------------ clock
+
+    def tick(self, n: int = 1) -> int:
+        self.clock += n
+        return self.clock
+
+    # ------------------------------------------------- worker lifecycle
+
+    def enroll(self, worker_id: str, measurement: bytes, *,
+               allow: bool = False) -> None:
+        """Register a worker identity.  Enrollment does NOT grant trust:
+        admission happens when its quote verifies against the policy
+        (``allow=True`` additionally allowlists the measurement — the
+        operator's provisioning step)."""
+        prev = self._workers.get(worker_id)
+        if prev is not None and prev != measurement:
+            raise KeyDirectoryError(
+                f"worker {worker_id!r} re-enrolled with a different "
+                f"measurement — identities are immutable")
+        self._workers[worker_id] = measurement
+        if allow:
+            self.policy.allow(measurement)
+
+    def quote_for(self, worker_id: str, report_data: bytes = b"") -> Quote:
+        """The worker's quoting enclave: a fresh signed quote over its
+        enrolled measurement, bound to ``report_data``."""
+        m = self._workers.get(worker_id)
+        if m is None:
+            raise KeyDirectoryError(f"unknown worker {worker_id!r}")
+        return self._qk.quote(worker_id, m, report_data, now=self.clock)
+
+    def verify(self, q: Quote,
+               expect_report_data: Optional[bytes] = None) -> None:
+        try:
+            verify_quote(self._qk, q, self.policy, now=self.clock,
+                         expect_report_data=expect_report_data)
+        except QuoteError as e:
+            if e.reason == "revoked":
+                raise RevokedWorkerError(q.worker_id, str(e)) from e
+            raise
+
+    def admit(self, worker_id: str) -> Quote:
+        """Quote-then-verify gate; raises on rejection, returns the quote."""
+        q = self.quote_for(worker_id)
+        self.verify(q)
+        return q
+
+    def is_admitted(self, worker_id: str) -> bool:
+        try:
+            self.admit(worker_id)
+            return True
+        except (QuoteError, KeyDirectoryError):
+            return False
+
+    # ------------------------------------------------------- sessions
+
+    def _end(self, worker_id: str, context: bytes) -> HandshakeEnd:
+        return HandshakeEnd(
+            quote_fn=lambda rd: self.quote_for(worker_id, rd),
+            verify_fn=lambda q, rd: self.verify(q, expect_report_data=rd),
+            secret=self._rng.randrange(2, 1 << 255),
+            context=context)
+
+    def establish(self, edge: str, left: str, right: str, *,
+                  stage_id: Optional[int] = None) -> StageKey:
+        """Run the attested handshake between two enrolled workers and
+        install the resulting session key for ``edge``.
+
+        Both flights carry quotes; both ends verify before deriving, so a
+        revoked or unallowlisted endpoint cannot obtain (or grant) key
+        material.  Re-establishing an existing edge replaces its session
+        (the re-handshake path after revocation/recovery).
+        """
+        if left == right:
+            raise KeyDirectoryError(
+                f"edge {edge!r} needs two distinct endpoints, got {left!r}")
+        context = b"|".join([b"ss-edge", edge.encode(),
+                             left.encode(), right.encode()])
+        a, b = self._end(left, context), self._end(right, context)
+        fa, fb = a.flight(), b.flight()
+        mat_a, tr_a = a.derive(fa, fb)        # left verifies right's quote
+        mat_b, tr_b = b.derive(fb, fa)        # right verifies left's quote
+        if mat_a != mat_b or tr_a != tr_b:    # DH agreement is exact
+            raise HandshakeError(f"key agreement failed on edge {edge!r}")
+        sid = stage_id if stage_id is not None else len(self._sessions)
+        key = key_from_bytes(mat_a, sid)
+        # born in the current epoch; older epochs predate the session
+        st = SessionState(edge=edge, left=left, right=right,
+                          transcript=tr_a, epoch=self.epoch,
+                          keys={self.epoch: key})
+        self._sessions[edge] = st
+        self.tick()
+        return key
+
+    def has_session(self, edge: str) -> bool:
+        return edge in self._sessions
+
+    def session(self, edge: str) -> SessionState:
+        st = self._sessions.get(edge)
+        if st is None:
+            raise NoSessionError(
+                f"no established session for edge {edge!r} — run "
+                f"KeyDirectory.establish (attested handshake) first")
+        return st
+
+    def edge_key(self, edge: str, *, epoch: Optional[int] = None) -> StageKey:
+        st = self.session(edge)
+        return st.key_at(st.epoch if epoch is None else epoch)
+
+    def handle(self, edge: str) -> EdgeHandle:
+        self.session(edge)                    # must exist
+        return EdgeHandle(self, edge)
+
+    def next_counter(self, edge: str) -> int:
+        """Allocate the next chunk counter for an edge (epoch-local; the
+        StageKey nonce guard backstops wraparound)."""
+        return self.next_counters(edge, 1)
+
+    def next_counters(self, edge: str, n: int) -> int:
+        """Allocate a contiguous block of ``n`` counters and return the
+        first.  A consumer that seals n items per round (secure_exchange
+        seals W² blocks) MUST reserve all n — allocating one and deriving
+        the rest would collide with the edge's other consumers."""
+        if n < 1:
+            raise KeyDirectoryError(f"counter block size must be >= 1: {n}")
+        st = self.session(edge)
+        c = st.chunks
+        st.chunks += n
+        return c
+
+    def edges(self) -> List[str]:
+        return list(self._sessions)
+
+    # ------------------------------------------------------- rotation
+
+    def advance_epoch(self) -> int:
+        """Ratchet every live session key to the next epoch and zero its
+        chunk counter.  Keys older than ``epoch_history`` epochs are
+        dropped (forward secrecy: drained traffic stays sealed)."""
+        self.epoch += 1
+        for st in self._sessions.values():
+            st.keys[self.epoch] = ratchet_key(
+                st.key_at(st.epoch), epoch=self.epoch,
+                transcript=st.transcript)
+            st.epoch = self.epoch
+            st.chunks = 0
+            for e in [e for e in st.keys
+                      if e <= self.epoch - self.epoch_history]:
+                del st.keys[e]
+        self.tick()
+        return self.epoch
+
+    # ------------------------------------------------------ revocation
+
+    def revoke(self, worker_id: str) -> List[str]:
+        """Quarantine a worker: its quotes stop verifying (pools must
+        skip it) and every session it terminates is torn down.  Returns
+        the edges dropped so the caller can re-handshake survivors.
+
+        Unknown ids are rejected: silently "revoking" a typo'd id would
+        leave the real worker processing chunks with no error anywhere.
+        """
+        if worker_id not in self._workers:
+            raise KeyDirectoryError(
+                f"cannot revoke unknown worker {worker_id!r} — enrolled "
+                f"ids look like {sorted(self._workers)[:4]}")
+        self.policy.revoked.add(worker_id)
+        dropped = [e for e, st in self._sessions.items()
+                   if worker_id in (st.left, st.right)]
+        for e in dropped:
+            del self._sessions[e]
+        self.tick()
+        return dropped
+
+    def reestablish(self, edge: str, left: str, right: str, *,
+                    stage_id: Optional[int] = None) -> StageKey:
+        """Recovery-path re-handshake on a surviving endpoint pair (both
+        are re-verified; a revoked survivor still fails)."""
+        return self.establish(edge, left, right, stage_id=stage_id)
+
+
+def ephemeral_edge_key(label: str = "edge", *, seed: int = 0,
+                       stage_id: int = 0) -> StageKey:
+    """A session key from a throwaway directory (tests/benchmarks): two
+    endpoints enrolled, allowlisted, and handshaken — the one sanctioned
+    shortcut to a StageKey outside a long-lived directory."""
+    from repro.attest.measure import IO_ENDPOINT
+    d = KeyDirectory(seed=seed)
+    d.enroll(f"{label}/a", IO_ENDPOINT, allow=True)
+    d.enroll(f"{label}/b", IO_ENDPOINT, allow=True)
+    return d.establish(label, f"{label}/a", f"{label}/b", stage_id=stage_id)

@@ -2,9 +2,16 @@
 
 The paper's sealed-storage analogue (§2: "data can also be persisted on
 stable storage protected by a seal key").  Checkpoints are written as one
-``.npz`` of flattened leaves + a JSON manifest; in ``sealed`` mode every
-leaf is ChaCha20-encrypted and the whole archive carries a host Poly1305
-tag (128-bit, big-int math is fine on the host — DESIGN.md §2).
+``.npz`` of flattened leaves + a JSON manifest; in ``sealed`` mode the
+archive blob rides the batched AEAD fast path
+(:func:`repro.crypto.aead.seal_many`): it is chunked into fixed-width
+uint32 rows and every row is ChaCha20-encrypted + CW-MAC-tagged in ONE
+compiled program, under a per-checkpoint key (seed key x random salt)
+with the step mixed into each row's nonce counter — no (key, nonce) pair
+recurs across checkpoints or stores.  ``restore`` verifies a keyed MAC
+over the whole tag list + length (truncation-proof) and then every row's
+MAC verdict, raising on tamper — a flipped ciphertext bit or a dropped
+trailing row can no longer silently corrupt a restored leaf.
 
 Elastic restore: leaves are loaded on host and re-placed under the
 *current* mesh's shardings — a checkpoint written on 16x16 restores onto
@@ -23,10 +30,16 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.crypto import poly1305_host
+from repro.crypto import aead
 from repro.crypto.keys import root_key_from_seed
 
 Params = Any
+
+# Blob rows for the batched seal: 16 KiB of words each keeps B reasonable
+# for multi-MB checkpoints while tiny test states stay a 1-row batch.
+_ROW_WORDS = 4096
+_SEAL_DOMAIN = np.uint32(0x5EA1)      # nonce word 0: "seal" domain
+_ROWS_PER_STEP = 1 << 20              # counter = step * 2^20 + row
 
 
 def _flatten(tree: Params) -> Tuple[Dict[str, np.ndarray], Any]:
@@ -47,18 +60,94 @@ def _seal_key(seed: int) -> bytes:
     return hashlib.sha256(root_key_from_seed(seed) + b"|seal").digest()
 
 
-def _stream_xor(key32: bytes, data: bytes) -> bytes:
-    """Host-side ChaCha20-CTR via the numpy reference (vectorized)."""
-    from repro.crypto import chacha20 as cc
-    import jax.numpy as jnp
-    key = np.frombuffer(key32, dtype="<u4")[:8]
-    nonce = np.array([0x5EA1, 0, 0], dtype=np.uint32)  # "seal" domain
+def _blob_rows(data: bytes) -> Tuple[np.ndarray, int]:
+    """bytes -> (B, _ROW_WORDS) u32 rows (zero-padded) + original length."""
     n = len(data)
-    pad = (-n) % 4
-    words = np.frombuffer(data + b"\0" * pad, dtype="<u4").copy()
-    out = np.asarray(cc.encrypt_words(jnp.asarray(key), jnp.asarray(nonce),
-                                      jnp.asarray(words)))
-    return out.tobytes()[:n]
+    row_bytes = _ROW_WORDS * 4
+    pad = (-n) % row_bytes
+    words = np.frombuffer(data + b"\0" * pad, dtype="<u4")
+    return words.reshape(-1, _ROW_WORDS).copy(), n
+
+
+def _row_nonces(n_rows: int, step: int) -> np.ndarray:
+    """Per-row nonces: (0x5EA1 domain, step * 2^20 + row) — unique per
+    (seal key, checkpoint step, row), so re-sealing a later step under
+    the same seal key never reuses a keystream."""
+    if n_rows > _ROWS_PER_STEP:
+        raise ValueError(f"checkpoint too large: {n_rows} rows > "
+                         f"{_ROWS_PER_STEP} per step")
+    c = np.uint64(step) * np.uint64(_ROWS_PER_STEP) + \
+        np.arange(n_rows, dtype=np.uint64)
+    return np.stack([np.full(n_rows, _SEAL_DOMAIN),
+                     (c & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+                     (c >> np.uint64(32)).astype(np.uint32)],
+                    axis=-1).astype(np.uint32)
+
+
+def _store_key(key32: bytes, salt: bytes) -> bytes:
+    """Per-checkpoint seal key: the seed key mixed with a random salt, so
+    two stores sealed under the same seed (and step) never share a
+    ChaCha20 keystream."""
+    return hashlib.sha256(key32 + b"|store|" + salt).digest()
+
+
+def _tags_mac(key32: bytes, step: int, tags: bytes, n_bytes: int) -> str:
+    """Keyed MAC binding the row-tag list, row count, and plaintext
+    length — per-row CW-MACs alone would let an attacker truncate
+    trailing rows (drop rows + their tags, shrink n_bytes) undetected."""
+    import hmac
+    body = b"ckpt-tags|%d|%d|" % (step, n_bytes) + tags
+    return hmac.new(key32, body, hashlib.sha256).hexdigest()
+
+
+def _seal_blob(key32: bytes, step: int, data: bytes
+               ) -> Tuple[bytes, Dict[str, Any]]:
+    """AEAD-seal a blob via the batched fast path.
+
+    Returns (ciphertext bytes incl. row padding, manifest metadata:
+    row tags + salt + length + the tag-list MAC).
+    """
+    salt = os.urandom(16)
+    key32 = _store_key(key32, salt)
+    key = np.frombuffer(key32, dtype="<u4")[:8].copy()
+    rows, n = _blob_rows(data)
+    ct, tags = aead.seal_many(key, _row_nonces(rows.shape[0], step), rows)
+    tags_b = np.asarray(tags).astype("<u4").tobytes()
+    meta = {"tags": tags_b.hex(), "n_bytes": n, "salt": salt.hex(),
+            "row_words": _ROW_WORDS, "nonce_step": step,
+            "mac": _tags_mac(key32, step, tags_b, n)}
+    return np.asarray(ct).astype("<u4").tobytes(), meta
+
+
+def _open_blob(key32: bytes, a: Dict[str, Any], blob: bytes,
+               what: str) -> bytes:
+    """Open + verify a sealed blob; raises ValueError on any tamper."""
+    import hmac
+    step, n_bytes = a["nonce_step"], a["n_bytes"]
+    key32 = _store_key(key32, bytes.fromhex(a["salt"]))
+    tags_b = bytes.fromhex(a["tags"])
+    if not hmac.compare_digest(a["mac"],
+                               _tags_mac(key32, step, tags_b, n_bytes)):
+        raise ValueError(
+            f"checkpoint {what}: AEAD verification FAILED on the tag list "
+            f"(rows dropped/reordered, length changed, or wrong seal key)")
+    key = np.frombuffer(key32, dtype="<u4")[:8].copy()
+    if len(blob) % (_ROW_WORDS * 4):
+        raise ValueError(f"checkpoint {what}: sealed blob length "
+                         f"{len(blob)} is not row-aligned (truncated?)")
+    ct = np.frombuffer(blob, dtype="<u4").reshape(-1, _ROW_WORDS)
+    tags = np.frombuffer(tags_b, dtype="<u4").reshape(-1, 2)
+    if tags.shape[0] != ct.shape[0]:
+        raise ValueError(f"checkpoint {what}: {tags.shape[0]} tags for "
+                         f"{ct.shape[0]} rows")
+    pt, ok = aead.open_many(key, _row_nonces(ct.shape[0], step), ct, tags)
+    ok = np.asarray(ok)
+    if not ok.all():
+        bad = np.flatnonzero(~ok).tolist()
+        raise ValueError(
+            f"checkpoint {what}: AEAD verification FAILED on rows {bad} "
+            f"(tampered or wrong seal key)")
+    return np.asarray(pt).astype("<u4").tobytes()[:n_bytes]
 
 
 def save(path: str, step: int, params: Params, opt_state: Params,
@@ -90,8 +179,8 @@ def save(path: str, step: int, params: Params, opt_state: Params,
     }
     if sealed:
         key = _seal_key(seed)
-        blob = _stream_xor(key, blob)
-        manifest["poly1305"] = poly1305_host.poly1305(key, blob).hex()
+        blob, aead_meta = _seal_blob(key, step, blob)
+        manifest["aead"] = aead_meta
         with open(os.path.join(tmp, "arrays.sealed"), "wb") as f:
             f.write(blob)
         os.remove(npz_path)
@@ -143,11 +232,16 @@ def restore(path: str, step: Optional[int] = None, *, seed: int = 0,
         key = _seal_key(seed)
         with open(os.path.join(d, "arrays.sealed"), "rb") as f:
             blob = f.read()
-        tag = bytes.fromhex(manifest["poly1305"])
-        if not poly1305_host.poly1305_verify(key, blob, tag):
-            raise ValueError(f"checkpoint {d}: Poly1305 verification FAILED "
-                             "(tampered or wrong seal key)")
-        blob = _stream_xor(key, blob)
+        a = manifest.get("aead")
+        if a is None:
+            raise ValueError(
+                f"checkpoint {d}: sealed with a pre-AEAD format "
+                f"(manifest has {'poly1305' if 'poly1305' in manifest else 'no'}"
+                f" seal metadata) — re-save it with the current code")
+        if a.get("row_words", _ROW_WORDS) != _ROW_WORDS:
+            raise ValueError(f"checkpoint {d}: unsupported row_words "
+                             f"{a['row_words']}")
+        blob = _open_blob(key, a, blob, d)
         if hashlib.sha256(blob).hexdigest() != manifest["sha256_plain"]:
             raise ValueError(f"checkpoint {d}: plaintext hash mismatch")
         import io

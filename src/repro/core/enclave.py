@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.crypto import aead, chacha20, cwmac
-from repro.crypto.keys import StageKey
+from repro.crypto.keys import StageKey, current_epoch as _cur_epoch, \
+    resolve_key as _key_at
 from repro.kernels.enclave_map import ops as enclave_ops
 
 U32 = jnp.uint32
@@ -40,6 +41,11 @@ class SealedChunk:
     counter: int                  # per-stream chunk counter -> nonce
     meta: Tuple                   # tensor framing (shape, dtype, pad)
     n_words: int                  # valid words before block padding
+    epoch: int = 0                # key epoch assigned at ingress; every
+                                  # edge seals this chunk under ITS epoch
+                                  # (counters are epoch-local — resealing
+                                  # under a later epoch would reuse that
+                                  # epoch's (key, nonce) pairs)
 
 
 def _words_to_blocks(words: jax.Array) -> Tuple[jax.Array, int]:
@@ -49,19 +55,26 @@ def _words_to_blocks(words: jax.Array) -> Tuple[jax.Array, int]:
     return padded.reshape(n_blocks, 16), n
 
 
-def seal_tensor(key: StageKey, counter: int, x: jax.Array) -> SealedChunk:
+def seal_tensor(key, counter: int, x: jax.Array,
+                epoch: Optional[int] = None) -> SealedChunk:
+    """Seal under ``key`` at ``epoch`` (the handle's current epoch when
+    None — ingress; executors pass the chunk's own epoch through)."""
+    if epoch is None:
+        epoch = _cur_epoch(key)
+    k = _key_at(key, epoch)
     words, meta = aead.tensor_to_words(x)
-    nonce = jnp.asarray(key.nonce(counter))
-    ct, tag = aead.seal(jnp.asarray(key.key), nonce, words)
+    nonce = jnp.asarray(k.nonce(counter))
+    ct, tag = aead.seal(jnp.asarray(k.key), nonce, words)
     blocks, n = _words_to_blocks(ct)
     return SealedChunk(blocks=blocks, tag=tag, counter=counter, meta=meta,
-                       n_words=n)
+                       n_words=n, epoch=epoch)
 
 
-def open_tensor(key: StageKey, chunk: SealedChunk) -> Tuple[jax.Array, jax.Array]:
-    nonce = jnp.asarray(key.nonce(chunk.counter))
+def open_tensor(key, chunk: SealedChunk) -> Tuple[jax.Array, jax.Array]:
+    k = _key_at(key, chunk.epoch)
+    nonce = jnp.asarray(k.nonce(chunk.counter))
     ct = chunk.blocks.reshape(-1)[:chunk.n_words]
-    pt, ok = aead.open_(jnp.asarray(key.key), nonce, ct, chunk.tag)
+    pt, ok = aead.open_(jnp.asarray(k.key), nonce, ct, chunk.tag)
     return aead.words_to_tensor(pt, chunk.meta), ok
 
 
@@ -78,9 +91,19 @@ def unplain_chunk(chunk: SealedChunk) -> jax.Array:
 
 
 class EnclaveExecutor:
-    """Executes one stage's operator under the configured security mode."""
+    """Executes one stage's operator under the configured security mode.
 
-    def __init__(self, mode: str, key_in: StageKey, key_out: StageKey,
+    ``key_in``/``key_out`` are either static :class:`StageKey`s or
+    KeyDirectory edge handles (repro.attest.directory.EdgeHandle): with
+    handles the executor opens AND re-seals each chunk under the epoch
+    the chunk was ingressed in (chunk counters are epoch-local — mixing
+    a counter into a later epoch would reuse that epoch's (key, nonce)
+    pairs).  A mid-stream rekey therefore drains old-epoch chunks to the
+    sink under their own ratchet lineage while newly ingressed chunks
+    ride the new keys.
+    """
+
+    def __init__(self, mode: str, key_in, key_out,
                  block_rows: int = 512):
         assert mode in ("plain", "encrypted", "enclave"), mode
         self.mode = mode
@@ -101,7 +124,11 @@ class EnclaveExecutor:
             if not bool(ok):
                 self.errors += 1
                 return None
-            return seal_tensor(self.key_out, chunk.counter, fn(x))
+            # reseal under the CHUNK's epoch (not the directory's current
+            # one): counters are epoch-local, so sealing an old-epoch chunk
+            # under a newer key would reuse that epoch's (key, nonce) pairs
+            return seal_tensor(self.key_out, chunk.counter, fn(x),
+                               epoch=chunk.epoch)
         raise ValueError(
             "enclave mode only executes registered static operators "
             "(run_static); arbitrary closures cannot be attested — "
@@ -115,30 +142,33 @@ class EnclaveExecutor:
             fn = lambda x: _apply_static_f32(op, const, x)
             return self.run(fn, chunk)
         # enclave: fused decrypt->op->encrypt, VMEM-confined plaintext.
-        nonce = jnp.asarray(self.key_in.nonce(chunk.counter))
+        # In and out keys both resolve at the chunk's epoch — see run().
+        kin = _key_at(self.key_in, chunk.epoch)
+        kout = _key_at(self.key_out, chunk.epoch)
+        nonce = jnp.asarray(kin.nonce(chunk.counter))
         pad_rows = (-chunk.blocks.shape[0]) % self.block_rows
         blocks = jnp.pad(chunk.blocks, ((0, pad_rows), (0, 0)))
         # MAC check on ciphertext happens outside the enclave (it is public
         # data); the keystream offset for payload is counter0=1.
-        r1, s1, r2, s2 = aead.derive_mac_keys(jnp.asarray(self.key_in.key),
-                                              nonce)
+        r1, s1, r2, s2 = aead.derive_mac_keys(jnp.asarray(kin.key), nonce)
         ct_words = chunk.blocks.reshape(-1)[:chunk.n_words]
         ok = jnp.all(cwmac.mac2(ct_words, r1, s1, r2, s2) == chunk.tag)
         if not bool(ok):
             self.errors += 1
             return None
         out_blocks = enclave_ops.enclave_map(
-            jnp.asarray(self.key_in.key), jnp.asarray(self.key_out.key),
+            jnp.asarray(kin.key), jnp.asarray(kout.key),
             nonce, 1, blocks, op=op, const=const,
             block_rows=self.block_rows)[:chunk.blocks.shape[0]]
         # re-tag under the outbound key
-        nonce_out = jnp.asarray(self.key_out.nonce(chunk.counter))
+        nonce_out = jnp.asarray(kout.nonce(chunk.counter))
         ro1, so1, ro2, so2 = aead.derive_mac_keys(
-            jnp.asarray(self.key_out.key), nonce_out)
+            jnp.asarray(kout.key), nonce_out)
         out_words = out_blocks.reshape(-1)[:chunk.n_words]
         tag = cwmac.mac2(out_words, ro1, so1, ro2, so2)
         return SealedChunk(blocks=out_blocks, tag=tag, counter=chunk.counter,
-                           meta=chunk.meta, n_words=chunk.n_words)
+                           meta=chunk.meta, n_words=chunk.n_words,
+                           epoch=chunk.epoch)
 
 
 def _apply_static_f32(op: str, const: float, x: jax.Array) -> jax.Array:

@@ -7,9 +7,15 @@ executor).  Routers between stages apply fair-queue (in) / round-robin
 (out) chunk scheduling — repro.core.router.
 
 Execution is streaming: chunks flow stage to stage; each stage re-keys the
-chunk for its outbound edge (per-stage session keys, repro.crypto.keys).
-Per-stage counters, byte totals, and MAC failures feed the benchmarks
-(paper Fig. 6/7/8).
+chunk for its outbound edge.  Per-edge session keys come from a
+``repro.attest.KeyDirectory``: every stage worker is measured
+(repro.attest.measure), enrolled, and admitted only if its quote verifies,
+and edge keys are established by the attested handshake — the trust
+bootstrap the paper assumes pre-done.  ``run(rekey_every_n=...)`` rotates
+every edge key mid-stream (epoch ratchet; old-epoch chunks drain, new
+chunks seal under the new epoch), and ``KeyDirectory.revoke`` evicts a
+worker live — subsequent windows skip it.  Per-stage counters, byte
+totals, and MAC failures feed the benchmarks (paper Fig. 6/7/8).
 """
 from __future__ import annotations
 
@@ -24,11 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.attest.directory import (EdgeHandle, KeyDirectory,
+                                    KeyDirectoryError)
+from repro.attest.measure import IO_ENDPOINT, measure_stage
 from repro.configs.base import SecureStreamConfig
 from repro.core import router as R
 from repro.core.enclave import (EnclaveExecutor, SealedChunk, egress,
                                 ingress)
-from repro.crypto.keys import StageKey, derive_stage_key, root_key_from_seed
 
 
 @dataclass
@@ -61,18 +69,81 @@ class StageMetrics:
 class Pipeline:
     def __init__(self, stages: Sequence[Stage],
                  secure: SecureStreamConfig = SecureStreamConfig(),
-                 seed: int = 0):
+                 seed: int = 0,
+                 directory: Optional[KeyDirectory] = None):
         self.stages = list(stages)
         self.secure = secure
         self.seed = seed
-        root = root_key_from_seed(seed)
-        # edge i connects stage i-1 -> i; key per edge (+ source and sink).
-        self.keys: List[StageKey] = [
-            derive_stage_key(root, f"edge{i}", i)
+        # The directory owns every session key; passing one in (scale_stage,
+        # shared trust domain) carries sessions, epoch, and revocations over.
+        self.directory = directory if directory is not None \
+            else KeyDirectory(seed=seed)
+        self._setup_attestation()
+        # edge i connects stage i-1 -> i (+ source and sink); handles pull
+        # the live epoch key from the directory on every seal/open.  Plain
+        # mode never touches a key, so it skips the edge handshakes
+        # entirely (workers are still measured and admitted).
+        self.keys: List[Optional[EdgeHandle]] = [
+            self.directory.handle(f"edge{i}")
             for i in range(len(self.stages) + 1)
-        ]
+        ] if secure.mode != "plain" else [None] * (len(self.stages) + 1)
         self.metrics: Dict[str, StageMetrics] = {
             s.name: StageMetrics() for s in self.stages}
+
+    # -------------------------------------------------------- attestation
+
+    @staticmethod
+    def worker_id(stage_name: str, w: int) -> str:
+        return f"{stage_name}/w{w}"
+
+    def _setup_attestation(self) -> None:
+        """Measure + enroll every endpoint and worker, verify quotes, and
+        establish per-edge session keys via the attested handshake.
+
+        Revoked worker ids stay quarantined (they are neither re-enrolled
+        nor admitted — scale_stage cannot resurrect them); existing edge
+        sessions are reused so a rescale does not re-key the stream.
+        """
+        d = self.directory
+        S = len(self.stages)
+        endpoints = ["io/source"] + [f"stage/{s.name}" for s in self.stages] \
+            + ["io/sink"]
+        d.enroll("io/source", IO_ENDPOINT, allow=True)
+        d.enroll("io/sink", IO_ENDPOINT, allow=True)
+        for st in self.stages:
+            m = measure_stage(op=st.op, const=st.const, fn=st.fn, sgx=st.sgx)
+            d.policy.allow(m)
+            d.enroll(f"stage/{st.name}", m)
+            for w in range(max(1, st.workers)):
+                wid = self.worker_id(st.name, w)
+                if d.policy.is_revoked(wid):
+                    continue                     # stays evicted
+                d.enroll(wid, m)
+                d.admit(wid)                     # raises unless quote verifies
+        if self.secure.mode == "plain":
+            return                               # no keys -> no handshakes
+        for i in range(S + 1):
+            if not d.has_session(f"edge{i}"):
+                d.establish(f"edge{i}", endpoints[i], endpoints[i + 1],
+                            stage_id=i)
+
+    def _live_workers(self, st: Stage) -> List[int]:
+        """Worker indices still dispatchable.
+
+        Full quote admission (sign + verify) happened at build/rescale;
+        the only bit that can flip mid-stream is revocation, so the
+        per-window check is a set lookup, not a re-attestation.
+        """
+        live = [w for w in range(max(1, st.workers))
+                if not self.directory.policy.is_revoked(
+                    self.worker_id(st.name, w))]
+        if not live:
+            # deliberately NOT RevokedWorkerError: a stage name is not a
+            # worker id, and the ft supervisor revokes e.worker_id
+            raise KeyDirectoryError(
+                f"every worker of stage {st.name!r} is revoked or "
+                f"inadmissible — nothing can process the edge")
+        return live
 
     # ------------------------------------------------------------------ run
 
@@ -94,17 +165,20 @@ class Pipeline:
         worker sub-streams — both via repro.core.router, so the rr->fq
         composition preserves stream order.  Chunks that fail their MAC
         check are dropped (reactive on_error semantics) and counted.
+        Revocation is re-checked per window, so a worker revoked
+        mid-stream stops receiving chunks at the next dispatch.
         """
-        W = len(pool)
         m = self.metrics[st.name]
-        if len(m.per_worker) < W:
-            m.per_worker.extend([0] * (W - len(m.per_worker)))
+        if len(m.per_worker) < len(pool):
+            m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
         while True:
-            window = list(itertools.islice(upstream, W))
+            live = self._live_workers(st)
+            window = list(itertools.islice(upstream, len(live)))
             if not window:
                 return
             worker_outs: List[List[SealedChunk]] = []
-            for w, queue in enumerate(R.round_robin(window, W)):
+            for k, queue in enumerate(R.round_robin(window, len(live))):
+                w = live[k]
                 outs: List[SealedChunk] = []
                 for chunk in queue:
                     t0 = time.perf_counter()
@@ -123,14 +197,63 @@ class Pipeline:
                 worker_outs.append(outs)
             yield from R.fair_queue(worker_outs)
 
+    def _ingress_stream(self, source: Iterable[jax.Array], mode: str,
+                        rekey_every_n: Optional[int]
+                        ) -> Iterator[SealedChunk]:
+        """Seal source tensors; rotate every edge key each N chunks.
+
+        Ingress counters are allocated from the directory's managed
+        per-edge counter, NOT a per-run enumerate: a second ``run()`` on
+        the same pipeline (or a ``scale_stage`` continuation, which
+        deliberately keeps the sessions) continues the count instead of
+        resealing fresh plaintext under already-used (key, nonce) pairs.
+        Rotation resets the managed counter, keeping counters epoch-local
+        (the nonce-exhaustion guard in repro.crypto.keys never trips on a
+        rotating stream); chunks sealed just before a flip carry their
+        epoch and drain under the old key while new chunks seal under the
+        new one.
+        """
+        n_plain = 0
+        for x in source:
+            if mode == "plain":
+                yield ingress(mode, None, n_plain, x)
+                n_plain += 1
+                continue
+            h0 = self.keys[0]
+            if rekey_every_n and \
+                    self.directory.session(h0.edge).chunks >= rekey_every_n:
+                self.directory.advance_epoch()
+            yield ingress(mode, h0, h0.next_counter(), x)
+
     def run(self, source: Iterable[jax.Array],
-            on_result: Optional[Callable] = None) -> Any:
+            on_result: Optional[Callable] = None,
+            rekey_every_n: Optional[int] = None) -> Any:
         """Stream source tensors through all stages; returns the terminal
-        reduce value (if the last stage reduces) or the last chunk."""
+        reduce value (if the last stage reduces) or the last chunk.
+
+        ``rekey_every_n``: rotate every edge session key after each N
+        source chunks (KeyDirectory.advance_epoch) — mid-stream, without
+        draining the pipeline.  Chunks open under the epoch they were
+        ingressed in, so the directory's ``epoch_history`` must cover the
+        deepest possible in-flight lag (checked up front: every stage
+        window can buffer up to its worker count of chunks).
+        """
         mode = self.secure.mode
-        stream: Iterator[SealedChunk] = (
-            ingress(mode, self.keys[0], counter, x)
-            for counter, x in enumerate(source))
+        if rekey_every_n and mode != "plain":
+            # worst-case chunks in flight = one window per stage (+1 being
+            # ingressed); an old chunk may lag that many rotations behind
+            in_flight = sum(max(1, s.workers) for s in self.stages) + 1
+            lag = -(-in_flight // rekey_every_n) + 1   # ceil + safety
+            if lag > self.directory.epoch_history:
+                raise ValueError(
+                    f"rekey_every_n={rekey_every_n} can rotate "
+                    f"{lag} epochs while up to {in_flight} chunks are in "
+                    f"flight, but KeyDirectory(epoch_history="
+                    f"{self.directory.epoch_history}) would prune keys "
+                    f"still needed to drain — raise epoch_history or "
+                    f"rekey_every_n")
+        stream: Iterator[SealedChunk] = self._ingress_stream(
+            source, mode, rekey_every_n)
 
         # compose map/filter stages up to the terminal reduce (if any)
         reduce_idx = next((i for i, s in enumerate(self.stages)
@@ -175,17 +298,20 @@ class Pipeline:
     def scale_stage(self, name: str, workers: int) -> "Pipeline":
         """Elastic scaling: change a stage's worker count (paper §5.5).
 
-        Session keys, the key-derivation seed, AND the accumulated
-        StageMetrics carry forward, so throughput/error reports stay
-        continuous across rescale events (the paper's live-reconfiguration
-        experiment reports one unbroken trajectory).
+        The KeyDirectory (sessions, epoch, revocations), the seed, AND the
+        accumulated StageMetrics carry forward, so throughput/error
+        reports stay continuous across rescale events and the stream is
+        not re-keyed (the paper's live-reconfiguration experiment reports
+        one unbroken trajectory).  New workers are admitted only if their
+        quote verifies against the stage's measurement; revoked ids stay
+        quarantined — scale-up cannot resurrect an evicted worker.
         """
         stages = [
             Stage(**{**s.__dict__, "workers": workers}) if s.name == name
             else s for s in self.stages
         ]
-        p = Pipeline(stages, self.secure, seed=self.seed)
-        p.keys = self.keys
+        p = Pipeline(stages, self.secure, seed=self.seed,
+                     directory=self.directory)
         for sname, m in self.metrics.items():
             pw = list(m.per_worker)
             if sname == name and len(pw) < workers:

@@ -20,12 +20,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.crypto import aead
-from repro.crypto.keys import StageKey
+from repro.crypto.keys import StageKey, resolve_key as _as_stage_key
 
 
-def protect(key: StageKey, step: int, x: jax.Array
+def protect(key, step: int, x: jax.Array
             ) -> Tuple[jax.Array, jax.Array, Tuple]:
     """Seal a tensor for the wire. Returns (ct_words, tag, meta)."""
+    key = _as_stage_key(key)
     words, meta = aead.tensor_to_words(x)
     ct, tag = aead.seal_many(jnp.asarray(key.key)[None],
                              jnp.asarray(key.nonce(step))[None],
@@ -33,16 +34,17 @@ def protect(key: StageKey, step: int, x: jax.Array
     return ct[0], tag[0], meta
 
 
-def unprotect(key: StageKey, step: int, ct: jax.Array, tag: jax.Array,
+def unprotect(key, step: int, ct: jax.Array, tag: jax.Array,
               meta: Tuple) -> Tuple[jax.Array, jax.Array]:
     """Open a sealed tensor. Returns (tensor, ok)."""
+    key = _as_stage_key(key)
     pt, ok = aead.open_many(jnp.asarray(key.key)[None],
                             jnp.asarray(key.nonce(step))[None],
                             ct[None], tag[None])
     return aead.words_to_tensor(pt[0], meta), ok[0]
 
 
-def protect_many(keys: Sequence[StageKey], steps: Sequence[int],
+def protect_many(keys: Sequence, steps: Sequence[int],
                  xs: jax.Array) -> Tuple[jax.Array, jax.Array, Tuple]:
     """Seal B same-shape tensors under B edge keys in ONE program.
 
@@ -50,6 +52,7 @@ def protect_many(keys: Sequence[StageKey], steps: Sequence[int],
     Returns (ct (B, n_words), tags (B, 2), meta) with ``meta`` shared by
     every item (same shape/dtype framing).
     """
+    keys = [_as_stage_key(k) for k in keys]
     words, meta = aead.tensor_to_words_batch(xs)
     kb = jnp.asarray(np.stack([np.asarray(k.key) for k in keys]))
     nb = jnp.asarray(np.stack([np.asarray(k.nonce(s))
@@ -58,10 +61,11 @@ def protect_many(keys: Sequence[StageKey], steps: Sequence[int],
     return ct, tags, meta
 
 
-def unprotect_many(keys: Sequence[StageKey], steps: Sequence[int],
+def unprotect_many(keys: Sequence, steps: Sequence[int],
                    cts: jax.Array, tags: jax.Array, meta: Tuple
                    ) -> Tuple[jax.Array, jax.Array]:
     """Open B sealed tensors in ONE program. Returns ((B, *item), ok (B,))."""
+    keys = [_as_stage_key(k) for k in keys]
     kb = jnp.asarray(np.stack([np.asarray(k.key) for k in keys]))
     nb = jnp.asarray(np.stack([np.asarray(k.nonce(s))
                                for k, s in zip(keys, steps)]))
@@ -69,7 +73,34 @@ def unprotect_many(keys: Sequence[StageKey], steps: Sequence[int],
     return aead.words_to_tensor_batch(pt, meta), ok
 
 
-def sealed_ppermute(key: StageKey, step: int, x: jax.Array, axis: str,
+class SecureChannel:
+    """A sealed channel bound to one KeyDirectory edge.
+
+    The channel never holds raw key material: every ``protect`` resolves
+    the edge's *current-epoch* session key and allocates the next managed
+    chunk counter from the directory (rotation resets it; the StageKey
+    nonce guard backstops exhaustion).  ``unprotect`` takes the header
+    ``(step, epoch)`` that ``protect`` returned, so chunks sealed before
+    an epoch flip still open after it — the drain path.
+    """
+
+    def __init__(self, handle):
+        self.handle = handle    # repro.attest.directory.EdgeHandle
+
+    def protect(self, x: jax.Array):
+        """-> ((step, epoch) header, ct, tag, meta)."""
+        step = self.handle.next_counter()
+        epoch = self.handle.epoch
+        ct, tag, meta = protect(self.handle.key(), step, x)
+        return (step, epoch), ct, tag, meta
+
+    def unprotect(self, header: Tuple[int, int], ct: jax.Array,
+                  tag: jax.Array, meta: Tuple):
+        step, epoch = header
+        return unprotect(self.handle.key(epoch), step, ct, tag, meta)
+
+
+def sealed_ppermute(key, step: int, x: jax.Array, axis: str,
                     perm) -> Tuple[jax.Array, jax.Array]:
     """collective_permute of a sealed activation (inside shard_map).
 
@@ -84,6 +115,7 @@ def sealed_ppermute(key: StageKey, step: int, x: jax.Array, axis: str,
     wire ciphertexts would leak ``x_i ^ x_j`` (a two-time pad).  The
     receiver re-derives the sender's index from the static ``perm``.
     """
+    key = _as_stage_key(key)
     words, meta = aead.tensor_to_words(x)
     me = jax.lax.axis_index(axis).astype(jnp.uint32)
     base = jnp.asarray(key.nonce(step), jnp.uint32)

@@ -225,8 +225,16 @@ def fastpath_stats() -> Dict[str, int]:
 
 
 def reset_fastpath_cache() -> None:
-    """Drop all cached programs and zero the counters (tests/benchmarks)."""
+    """Drop all cached programs and zero the counters (tests/benchmarks
+    that need a genuinely cold cache — recompiles cost ~2 s/shape)."""
     _COMPILE_CACHE.clear()
+    _FASTPATH_STATS.update(compiles=0, hits=0)
+
+
+def reset_fastpath_stats() -> None:
+    """Zero the hit/compile counters but KEEP the compiled programs —
+    enough for order-independent cache-hit assertions without re-paying
+    warm compiles (the per-module test fixture)."""
     _FASTPATH_STATS.update(compiles=0, hits=0)
 
 

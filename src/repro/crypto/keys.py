@@ -1,10 +1,21 @@
 """Session keys per pipeline stage.
 
-As in the paper (§4): "we assume that attestation and key establishment was
-previously performed. As a result, keys safely reside within the enclave."
-Key material is derived deterministically from a root key + stage name so
-every worker of a stage (and its downstream router) agrees without a wire
-protocol; nonces are (stage_id, chunk_counter) pairs, never reused.
+The paper (§4) assumes "attestation and key establishment was previously
+performed" — that assumption is now implemented by ``repro.attest``:
+session keys are established per edge by the quote-checked DH handshake
+(`repro.attest.handshake`) and owned/ratcheted/revoked by
+`repro.attest.directory.KeyDirectory` (which builds StageKeys via
+``repro.attest.rotation.key_from_bytes``, not this module's derivation).
+This module defines the key *container* and the nonce discipline;
+``derive_stage_key`` survives only as the legacy root-seed derivation
+exercised by the crypto unit tests (a grep test asserts nothing else
+calls it).
+
+Nonces are (domain, chunk_counter) pairs, never reused under one key: the
+counter occupies nonce words 1..2 (64 bits) and :meth:`StageKey.nonce`
+raises :class:`NonceExhaustedError` before it can wrap — long-running
+streams must rotate keys (``KeyDirectory.advance_epoch`` resets the
+per-edge counters) well before that hard stop.
 """
 from __future__ import annotations
 
@@ -16,6 +27,16 @@ import jax.numpy as jnp
 import numpy as np
 
 U32 = jnp.uint32
+
+# The chunk counter rides in two u32 nonce words; reusing a (key, nonce)
+# pair is a two-time pad, so the guard below is a hard error, not a wrap.
+NONCE_COUNTER_BITS = 64
+NONCE_COUNTER_MAX = (1 << NONCE_COUNTER_BITS) - 1
+
+
+class NonceExhaustedError(RuntimeError):
+    """The 64-bit chunk counter is exhausted for this key; rotate first
+    (repro.attest.rotation / KeyDirectory.advance_epoch)."""
 
 
 @dataclass(frozen=True)
@@ -29,10 +50,33 @@ class StageKey:
         # enclave kernel re-encrypts under the *outbound* key with the same
         # nonce — sender and receiver must agree on it without knowing each
         # other's stage ids.
+        if not 0 <= chunk_counter <= NONCE_COUNTER_MAX:
+            raise NonceExhaustedError(
+                f"chunk counter {chunk_counter} outside [0, 2^"
+                f"{NONCE_COUNTER_BITS}) for stage {self.stage_id}: the "
+                f"nonce space is spent — advance the key epoch "
+                f"(KeyDirectory.advance_epoch) before the counter wraps")
         return np.array([0,
                          chunk_counter & 0xFFFFFFFF,
                          (chunk_counter >> 32) & 0xFFFFFFFF],
                         dtype=np.uint32)
+
+
+def resolve_key(key, epoch: int = None) -> "StageKey":
+    """Resolve a StageKey or a KeyDirectory EdgeHandle at an epoch.
+
+    Raw StageKeys are static (epoch-less) and pass through; handles
+    (repro.attest.directory.EdgeHandle, duck-typed to avoid a crypto ->
+    attest import) pull the live key from the directory — ``epoch=None``
+    means the edge's current epoch.  The single dispatch point for every
+    sealing layer (enclave, secure_channel).
+    """
+    return key if isinstance(key, StageKey) else key.key(epoch)
+
+
+def current_epoch(key) -> int:
+    """The epoch a seal under ``key`` happens in (0 for static keys)."""
+    return 0 if isinstance(key, StageKey) else key.epoch
 
 
 def derive_stage_key(root: bytes, stage_name: str, stage_id: int) -> StageKey:

@@ -44,20 +44,21 @@ def _route_counter_base(W: int) -> np.ndarray:
     return (src * np.uint64(W) + dst).reshape(-1)
 
 
-def _route_nonces(W: int, step: int) -> jax.Array:
-    """(W*W, 3) nonces for the (src, dst) routing counters of one round.
+def _route_nonces_base(W: int, base: int) -> jax.Array:
+    """(W*W, 3) nonces for counters ``base + src*W + dst`` of one round.
 
-    Counter ``(step*W + src)*W + dst`` is unique per (key, step, src, dst),
-    so no nonce is ever reused across shards or rounds.  The host-side
-    numpy grid is cached per W (and the final device array per (W, step)),
-    so repeated rounds pay no reconstruction cost.
+    Each counter is unique per (key, base, src, dst) as long as the caller
+    reserves the whole [base, base + W²) block — no nonce reuse across
+    shards or rounds.  The host-side numpy grid is cached per W (and the
+    final device array per (W, base)), so repeated rounds pay no
+    reconstruction cost.
     """
-    ck = (W, int(step))
+    ck = (W, int(base))
     hit = _NONCE_CACHE.get(ck)
     if hit is not None:
         _NONCE_CACHE.move_to_end(ck)
         return hit
-    c = np.uint64(step) * np.uint64(W) * np.uint64(W) + _route_counter_base(W)
+    c = np.uint64(base) + _route_counter_base(W)
     out = jnp.asarray(np.stack([np.zeros_like(c),
                                 c & np.uint64(0xFFFFFFFF),
                                 c >> np.uint64(32)],
@@ -66,6 +67,12 @@ def _route_nonces(W: int, step: int) -> jax.Array:
     while len(_NONCE_CACHE) > _NONCE_CACHE_MAX:
         _NONCE_CACHE.popitem(last=False)
     return out
+
+
+def _route_nonces(W: int, step: int) -> jax.Array:
+    """Legacy step addressing: round ``step`` covers counters
+    ``(step*W + src)*W + dst`` — i.e. base ``step * W²``."""
+    return _route_nonces_base(W, step * W * W)
 
 
 def _mailbox_spec(ndim: int, axis: str) -> P:
@@ -103,18 +110,52 @@ def exchange(x: jax.Array, mesh, axis: str = "model") -> jax.Array:
                      check_vma=False)(x)
 
 
+def _resolve_session(key, step: Optional[int],
+                     n_counters: int) -> Tuple[StageKey, int]:
+    """Resolve (key, base counter) for a round that seals ``n_counters``
+    blocks, from a raw StageKey or a KeyDirectory handle.
+
+    With an ``EdgeHandle`` (repro.attest.directory) the key is the edge's
+    current-epoch session key and the WHOLE ``n_counters`` block is
+    reserved from the directory's per-edge chunk counter — so other
+    consumers of the same edge (e.g. ``SecureChannel.protect``) can never
+    land inside this round's nonce range, and an epoch rotation resets
+    the counter before exhaustion.  An explicit ``step`` is rejected for
+    handles: it would bypass the managed counter and collide with a later
+    managed allocation (a two-time pad).  A raw StageKey keeps the legacy
+    contract: ``step`` is required, addresses a disjoint ``n_counters``-
+    sized block per round, and uniqueness is the caller's burden.
+    """
+    if key is not None and not isinstance(key, StageKey):
+        if step is not None:
+            raise ValueError(
+                "a KeyDirectory edge handle manages its own round "
+                "counters; passing an explicit step would collide with a "
+                "later managed allocation of the same value (nonce reuse)")
+        return key.key(), key.next_counters(n_counters)
+    if step is None:
+        raise ValueError(
+            "secure_exchange requires an explicit per-round step: reusing "
+            "a (key, step) pair reuses the ChaCha20 keystream (pass a "
+            "KeyDirectory edge handle to get managed counters)")
+    return key, step * n_counters
+
+
 def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
-                    key: StageKey, step: Optional[int] = None
+                    key, step: Optional[int] = None
                     ) -> Tuple[jax.Array, jax.Array]:
     """AEAD-sealed all_to_all: ciphertext + tags cross the wire.
 
-    Each (src=i, dst=j) sub-block is sealed under ``key`` with counter
+    ``key`` is a KeyDirectory edge handle (preferred — current-epoch
+    session key + managed round counters) or a raw StageKey, in which
+    case ``step`` is *required* and must be unique per (key, round) —
+    reusing it reuses every (key, nonce) pair, i.e. a two-time pad.
+
+    Each (src=i, dst=j) sub-block is sealed with counter
     ``(step*W + i)*W + j`` before the collective and opened (MAC-checked)
-    on the destination shard.  ``step`` is *required* and must be unique
-    per (key, round) — reusing it reuses every (key, nonce) pair, i.e.
-    a two-time pad.  ``x`` must be a 4-byte dtype (words are a same-width
-    bitcast).  Returns ``(y, ok)`` with ``y[j, i]`` the opened block
-    worker j received from i and ``ok[j, i]`` its MAC verdict.
+    on the destination shard.  ``x`` must be a 4-byte dtype (words are a
+    same-width bitcast).  Returns ``(y, ok)`` with ``y[j, i]`` the opened
+    block worker j received from i and ``ok[j, i]`` its MAC verdict.
 
     All W² blocks are sealed by ONE compiled :func:`repro.crypto.aead.
     seal_many` program (shape-keyed compile cache: every round reuses the
@@ -123,11 +164,8 @@ def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
     each round issues exactly ONE :func:`exchange` collective.  The wire
     still only ever carries ciphertext and MAC tags.
     """
-    if step is None:
-        raise ValueError(
-            "secure_exchange requires an explicit per-round step: reusing "
-            "a (key, step) pair reuses the ChaCha20 keystream")
     W = int(mesh.shape[axis])
+    key, base = _resolve_session(key, step, W * W)
     _check_mailbox(x, W)
     if x.dtype.itemsize != 4:
         raise ValueError(f"secure_exchange needs a 4-byte dtype, got {x.dtype}")
@@ -138,7 +176,7 @@ def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
     flat = x.reshape(W * W, n_words)
     words = flat if x.dtype == jnp.uint32 else \
         jax.lax.bitcast_convert_type(flat, jnp.uint32)
-    nonces = _route_nonces(W, step)                       # (W*W, 3) [src, dst]
+    nonces = _route_nonces_base(W, base)                  # (W*W, 3) [src, dst]
     ct, tags = aead.seal_many(kw, nonces, words)          # one program
 
     # pack ciphertext + tags into one payload: ONE collective per round
@@ -161,7 +199,7 @@ def _consistent_hash(k: jax.Array) -> jax.Array:
 
 
 def keyed_route(x: jax.Array, row_keys: jax.Array, mesh,
-                axis: str = "model", *, key: Optional[StageKey] = None,
+                axis: str = "model", *, key=None,
                 step: Optional[int] = None, hash_keys: bool = True):
     """The router's ``keyed`` policy as a sharded collective.
 
@@ -169,8 +207,10 @@ def keyed_route(x: jax.Array, row_keys: jax.Array, mesh,
     (W, n) integer keys.  Each shard buckets its rows by
     ``hash(key) % W`` (dense, via :func:`repro.core.router.shuffle_by_key`)
     and the buckets cross the mesh through :func:`exchange` — or
-    :func:`secure_exchange` when ``key`` is given (``step`` then required,
-    unique per round), in which case the wire carries only ciphertext:
+    :func:`secure_exchange` when ``key`` is given (a KeyDirectory edge
+    handle with managed counters, or a raw StageKey with ``step`` then
+    required and unique per round), in which case the wire carries only
+    ciphertext:
     the per-bucket row counts ride *inside* the sealed payload so even
     the key-distribution metadata stays hidden.
 

@@ -12,7 +12,11 @@ This module is the *schedule* reference: stages execute in tick order in
 one program, which is exact on any device count (tests run it on 1 CPU
 device).  On a real ``("stage",)`` mesh the same tick loop lowers onto
 :func:`repro.core.secure_channel.sealed_ppermute` — ciphertext on the ICI
-wire — which shares the per-edge keys derived here.
+wire — which shares the per-edge session keys.  Keys come from a
+``repro.attest.KeyDirectory`` (:func:`edge_directory`): each stage
+boundary is an attested handshake session, and ``rekey_every_n`` ratchets
+every edge key mid-schedule (chunks sealed before a flip drain under
+their sealing epoch).
 
 Sealing rides the batched AEAD fast path: every stage->stage hand-off of a
 tick is sealed by ONE :func:`repro.core.secure_channel.protect_many`
@@ -28,8 +32,10 @@ from typing import Any, Callable, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.attest.directory import KeyDirectory
+from repro.attest.measure import measure_bytes
 from repro.core.secure_channel import protect_many, unprotect_many
-from repro.crypto.keys import StageKey, derive_stage_key, root_key_from_seed
+from repro.crypto.keys import StageKey
 
 
 class PipelineMACError(RuntimeError):
@@ -48,13 +54,41 @@ def gpipe_schedule(num_stages: int,
             for t in range(M + S - 1)]
 
 
-def edge_keys(num_stages: int, *, seed: int = 0,
-              label: str = "pp") -> List[StageKey]:
-    """One session key per stage boundary; ``keys[s]`` seals the edge
-    *into* stage s (``keys[0]`` is unused — stage 0 reads the source)."""
-    root = root_key_from_seed(seed)
-    return [derive_stage_key(root, f"{label}-edge{s}", s)
-            for s in range(num_stages)]
+def edge_directory(num_stages: int, *, seed: int = 0,
+                   label: str = "pp") -> KeyDirectory:
+    """A KeyDirectory with one attested session per stage boundary.
+
+    Each stage endpoint is enrolled under a measurement of its position in
+    the chain and edge ``{label}-edge{s}`` (into stage s, s >= 1) is
+    established by the quote-checked handshake — the paper's "key
+    establishment was previously performed", actually performed.
+    """
+    d = KeyDirectory(seed=seed)
+    for s in range(num_stages):
+        m = measure_bytes(b"pp-stage", label.encode(), str(s).encode())
+        d.enroll(f"{label}/stage{s}", m, allow=True)
+    for s in range(1, num_stages):
+        d.establish(f"{label}-edge{s}", f"{label}/stage{s - 1}",
+                    f"{label}/stage{s}", stage_id=s)
+    return d
+
+
+# pipeline_apply's default directories, one per (S, seed, label): the
+# handshakes are a control-plane cost (~84 ms/edge) that must not recur
+# on every invocation of a per-step schedule.  Callers who rekey should
+# pass their own directory — epoch state on a shared default would leak
+# across unrelated callers.
+_DEFAULT_DIRS: dict = {}
+
+
+def _default_edge_directory(num_stages: int, seed: int,
+                            label: str) -> KeyDirectory:
+    ck = (num_stages, seed, label)
+    d = _DEFAULT_DIRS.get(ck)
+    if d is None:
+        d = _DEFAULT_DIRS[ck] = edge_directory(num_stages, seed=seed,
+                                               label=label)
+    return d
 
 
 def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
@@ -64,7 +98,10 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
                    axis: str = "stage",
                    seal: bool = True,
                    key_seed: int = 0,
-                   step: int = 0) -> jax.Array:
+                   step: int = 0,
+                   directory: Optional[KeyDirectory] = None,
+                   rekey_every_n: Optional[int] = None,
+                   key_label: str = "pp") -> jax.Array:
     """Apply an S-stage pipeline to M microbatches on the GPipe schedule.
 
     ``stage_weights``: (S, ...) — stage s computes
@@ -73,10 +110,18 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
     bitwise equal to sequentially chaining the stages per microbatch
     (sealing is an exact XOR-stream roundtrip).
 
+    Edge keys come from a ``repro.attest.KeyDirectory`` (``directory``,
+    or an ephemeral :func:`edge_directory` seeded by ``key_seed``), one
+    attested session per boundary.  ``rekey_every_n`` ratchets every edge
+    key after each N ticks, mid-schedule: a hand-off sealed in epoch E is
+    opened with the epoch-E key one tick later even if the flip happened
+    in between (old epoch drains, new epoch seals).
+
     Edge counters are ``step * M + microbatch``: a caller invoking this
-    repeatedly under the same ``key_seed`` (e.g. once per training step)
-    MUST pass a distinct ``step`` each time, or every invocation reuses
-    the per-edge (key, nonce) pairs — a two-time pad on the activations.
+    repeatedly under the same directory/seed (e.g. once per training
+    step) MUST pass a distinct ``step`` each time, or every invocation
+    reuses the per-edge (key, nonce) pairs — a two-time pad on the
+    activations.
 
     When ``mesh`` carries an ``axis`` axis of size > 1 it must equal S
     (one stage per shard); the schedule itself is device-count agnostic.
@@ -88,27 +133,41 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
         if n > 1 and n != S:
             raise ValueError(
                 f"mesh axis {axis!r} has size {n} but there are {S} stages")
-    keys = edge_keys(S, seed=key_seed) if seal else None
+    d = None
+    if seal and S > 1:
+        d = directory if directory is not None else \
+            _default_edge_directory(S, key_seed, key_label)
+        if directory is None and rekey_every_n:
+            raise ValueError(
+                "rekey_every_n mutates the directory's epoch state; pass "
+                "an explicit directory= (edge_directory(...)) instead of "
+                "sharing the cached default")
+
+    def _edge_key(s: int, epoch: Optional[int] = None) -> StageKey:
+        return d.edge_key(f"{key_label}-edge{s}", epoch=epoch)
 
     outs: List[Optional[jax.Array]] = [None] * M
-    # inflight[s]: the (sealed) activation entering stage s next tick.
+    # inflight[s]: the (sealed) activation entering stage s next tick;
+    # sealed entries are (ct, tag, meta, epoch-at-seal).
     inflight: dict = {}
-    for tick in gpipe_schedule(S, M):
+    for t, tick in enumerate(gpipe_schedule(S, M)):
         # open every sealed inflow of this tick in ONE batched program
         # (grouped by activation shape; shape-preserving stage_fns — the
-        # common case — yield a single group per tick)
+        # common case — yield a single group per tick).  Per-item keys are
+        # resolved at each entry's sealing epoch, so one batch may mix
+        # epochs across a rekey boundary.
         opened: dict = {}
         if seal:
             groups: dict = {}
             for s, mb in tick:
                 if s > 0:
-                    ct, _, meta = inflight[s]
+                    ct, _, meta, _ = inflight[s]
                     groups.setdefault((ct.shape, meta), []).append((s, mb))
             for (_, meta), members in groups.items():
                 cts = jnp.stack([inflight[s][0] for s, _ in members])
                 tags = jnp.stack([inflight[s][1] for s, _ in members])
                 xs, oks = unprotect_many(
-                    [keys[s] for s, _ in members],
+                    [_edge_key(s, inflight[s][3]) for s, _ in members],
                     [step * M + mb for _, mb in members], cts, tags, meta)
                 for i, (s, mb) in enumerate(members):
                     if not bool(oks[i]):
@@ -141,13 +200,17 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
                                       []).append((s, mb, y))
             for members in out_groups.values():
                 cts, tags, meta = protect_many(
-                    [keys[s] for s, _, _ in members],
+                    [_edge_key(s) for s, _, _ in members],
                     [step * M + mb for _, mb, _ in members],
                     jnp.stack([y for _, _, y in members]))
                 for i, (s, _, _) in enumerate(members):
-                    nxt[s] = (cts[i], tags[i], meta)
+                    nxt[s] = (cts[i], tags[i], meta, d.epoch)
         else:
             for s, _, y in sends:
                 nxt[s] = y
         inflight = nxt
+        # epoch flip between ticks: the hand-offs sealed above keep their
+        # sealing epoch and drain under it next tick
+        if d is not None and rekey_every_n and (t + 1) % rekey_every_n == 0:
+            d.advance_epoch()
     return jnp.stack(outs)

@@ -12,6 +12,13 @@ restore, repro.ckpt).  This module provides the policy layer:
   restored step (streams are counter-addressed, so replay = fast-forward
   of the chunk counter — the SecureStreams nonce discipline gives
   exactly-once semantics for free).
+
+Revocation (repro.attest) is handled like a failed node: when a failure
+names a worker (``worker_id`` on the exception, or an injector kind of
+``"revoked:<id>"``), the supervisor quarantines it in the KeyDirectory —
+its quotes stop verifying, its sessions are torn down — then runs the
+``reestablish`` hook (re-handshake on the surviving set) before the
+checkpoint restore.
 """
 from __future__ import annotations
 
@@ -25,6 +32,10 @@ class SimulatedFailure(RuntimeError):
         super().__init__(f"simulated {kind} at step {step}")
         self.kind = kind
         self.step = step
+        # "revoked:<worker_id>" marks a compromised-worker eviction; the
+        # supervisor treats it as a failed node + revocation.
+        self.worker_id = kind.split(":", 1)[1] \
+            if kind.startswith("revoked:") else None
 
 
 @dataclass
@@ -45,6 +56,7 @@ class RecoveryReport:
     failures: List[Tuple[int, str]] = field(default_factory=list)
     replayed_steps: int = 0
     final_step: int = -1
+    revoked_workers: List[str] = field(default_factory=list)
 
 
 def run_with_recovery(
@@ -55,8 +67,20 @@ def run_with_recovery(
     restore: Callable[[], int],
     # restore() -> step to resume from (restores model state internally)
     max_restarts: int = 8,
+    directory=None,
+    # repro.attest KeyDirectory: failures that name a worker_id revoke it
+    reestablish: Optional[Callable[[Any], None]] = None,
+    # reestablish(directory): re-handshake sessions on the surviving set
 ) -> RecoveryReport:
-    """Supervisor loop: keep running until total_steps or restart budget."""
+    """Supervisor loop: keep running until total_steps or restart budget.
+
+    A failure carrying a ``worker_id`` (e.g. an injector kind of
+    ``"revoked:<id>"`` or repro.attest's RevokedWorkerError) is a
+    compromised worker, not just a crashed one: it is revoked in
+    ``directory`` (quarantined + its sessions dropped) and
+    ``reestablish`` runs before the restore so the survivors re-handshake
+    — then recovery proceeds exactly like a node loss.
+    """
     report = RecoveryReport()
     step = restore()
     while step < total_steps:
@@ -69,6 +93,18 @@ def run_with_recovery(
             if report.restarts > max_restarts:
                 raise RuntimeError(
                     f"restart budget exhausted after {report.restarts}") from e
+            wid = getattr(e, "worker_id", None)
+            if wid is not None and directory is not None:
+                from repro.attest.directory import KeyDirectoryError
+                if wid not in directory.policy.revoked:
+                    try:
+                        directory.revoke(wid)
+                    except KeyDirectoryError:
+                        wid = None        # names no enrolled worker
+                if wid is not None:
+                    report.revoked_workers.append(wid)
+                    if reestablish is not None:
+                        reestablish(directory)
             resumed = restore()
             report.replayed_steps += max(failed_at - resumed, 0)
             step = resumed

@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.attest.directory import KeyDirectory
+from repro.attest.measure import IO_ENDPOINT
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.base import RunConfig
 from repro.core.enclave import ingress, egress
-from repro.crypto.keys import derive_stage_key, root_key_from_seed
 from repro.dist.meshctx import MeshContext
 from repro.ft.failures import FailureInjector
 from repro.ft.straggler import StragglerDetector
@@ -54,8 +55,15 @@ class Trainer:
 
         step_fn, self.opt = make_train_step(run, ctx)
         self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
-        self._data_key = derive_stage_key(
-            root_key_from_seed(tcfg.seed), "train-data", 0)
+        # Attested data channel: the source and the trainer handshake via
+        # the KeyDirectory; the session key (not a derived constant) seals
+        # every batch.  One directory per trainer = one trust domain; a
+        # restart reuses it, so replayed chunks re-open under the same key.
+        self.directory = KeyDirectory(seed=tcfg.seed)
+        self.directory.enroll("io/data-source", IO_ENDPOINT, allow=True)
+        self.directory.enroll("trainer", IO_ENDPOINT, allow=True)
+        self._data_key = self.directory.establish(
+            "train-data", "io/data-source", "trainer", stage_id=0)
 
         self.params = model_api.init_params(run.model, jax.random.key(run.seed))
         self.opt_state = self.opt.init(self.params)

@@ -14,3 +14,16 @@ def ctx():
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.key(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_aead_fastpath_stats():
+    """Zero the AEAD compile-cache STATS at each module boundary so
+    cache-hit assertions (test_aead_fastpath) are order-independent —
+    any module may warm the cache with arbitrary shapes before them.
+    Compiled programs are kept (stats-only reset): dropping them would
+    re-pay ~2 s/shape compiles in every module; tests that need a cold
+    cache call aead.reset_fastpath_cache() themselves."""
+    from repro.crypto import aead
+    aead.reset_fastpath_stats()
+    yield

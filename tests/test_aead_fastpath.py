@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.attest.directory import ephemeral_edge_key
 from repro.crypto import aead, chacha20, cwmac
-from repro.crypto.keys import derive_stage_key, root_key_from_seed
 
 rng = np.random.default_rng(7)
 
@@ -203,8 +203,8 @@ def test_tensor_batch_framing_matches_scalar(dtype):
 
 def test_protect_many_roundtrip_and_cross_key_rejection():
     from repro.core.secure_channel import protect_many, unprotect_many
-    root = root_key_from_seed(3)
-    keys = [derive_stage_key(root, f"edge{i}", i) for i in range(3)]
+    keys = [ephemeral_edge_key(f"edge{i}", seed=3, stage_id=i)
+            for i in range(3)]
     steps = [10, 11, 12]
     xs = jax.random.normal(jax.random.key(1), (3, 4, 6), jnp.bfloat16)
     cts, tags, meta = protect_many(keys, steps, xs)
@@ -223,7 +223,7 @@ def test_secure_exchange_issues_one_collective_per_round():
     from repro.dist import collectives
     mesh = jax.make_mesh((1,), ("model",))
     x = jax.random.normal(jax.random.key(3), (1, 1, 16, 4), jnp.float32)
-    key = derive_stage_key(root_key_from_seed(0), "shuffle", 0)
+    key = ephemeral_edge_key("shuffle", seed=0)
     c0 = collectives.exchange_call_count()
     y, ok = collectives.secure_exchange(x, mesh, "model", key=key, step=5)
     assert collectives.exchange_call_count() - c0 == 1
@@ -237,7 +237,7 @@ def test_sealed_ppermute_packed_payload_roundtrip():
     from repro.core.secure_channel import sealed_ppermute
     from repro.dist.compat import shard_map
     mesh = jax.make_mesh((1,), ("stage",))
-    key = derive_stage_key(root_key_from_seed(2), "pp-edge", 1)
+    key = ephemeral_edge_key("pp-edge", seed=2, stage_id=1)
     x = jnp.arange(1 * 32, dtype=jnp.uint32).reshape(1, 32)
 
     def body(xb):  # local (1, 32)

@@ -43,8 +43,49 @@ def test_sealed_checkpoint_tamper_detected(tmp_path):
         byte = f.read(1)
         f.seek(100)
         f.write(bytes([byte[0] ^ 0x01]))
-    with pytest.raises(ValueError, match="Poly1305"):
+    with pytest.raises(ValueError, match="AEAD verification FAILED"):
         ckpt.restore(path, params_like=params, opt_like=opt)
+
+
+def test_sealed_checkpoint_truncation_detected(tmp_path):
+    """Dropping trailing rows + their tags + shrinking n_bytes must fail
+    the tag-list MAC — per-row MACs alone can't bind the row count."""
+    import json
+    params = {"w": jnp.zeros((10000,), jnp.float32)}   # ~40KB -> 3 rows
+    opt = {}
+    path = str(tmp_path / "ck")
+    final = ckpt.save(path, 2, params, opt, sealed=True)
+    man_path = os.path.join(final, "manifest.json")
+    man = json.load(open(man_path))
+    row_bytes = man["aead"]["row_words"] * 4
+    blob_path = os.path.join(final, "arrays.sealed")
+    blob = open(blob_path, "rb").read()
+    assert len(blob) // row_bytes >= 2
+    with open(blob_path, "wb") as f:                   # drop the last row
+        f.write(blob[:-row_bytes])
+    man["aead"]["tags"] = man["aead"]["tags"][:-16]    # ...and its tag
+    man["aead"]["n_bytes"] = (len(blob) - row_bytes)   # ...and the length
+    json.dump(man, open(man_path, "w"))
+    with pytest.raises(ValueError, match="tag list"):
+        ckpt.restore(path, params_like=params, opt_like=opt)
+
+
+def test_sealed_checkpoints_never_share_keystream(tmp_path):
+    """Two stores sealed with the same seed + step must not reuse a
+    ChaCha20 keystream: XOR of the blobs must not equal XOR of the
+    plaintexts (the per-store salt separates the keys)."""
+    a = {"w": jnp.zeros((4096,), jnp.float32)}
+    b = {"w": jnp.ones((4096,), jnp.float32)}
+    fa = ckpt.save(str(tmp_path / "a"), 5, a, {}, sealed=True, seed=0)
+    fb = ckpt.save(str(tmp_path / "b"), 5, b, {}, sealed=True, seed=0)
+    ba = open(os.path.join(fa, "arrays.sealed"), "rb").read()
+    bb = open(os.path.join(fb, "arrays.sealed"), "rb").read()
+    n = min(len(ba), len(bb))
+    xor = np.frombuffer(ba[:n], np.uint8) ^ np.frombuffer(bb[:n], np.uint8)
+    # identical keystream would make large runs of the XOR equal the
+    # plaintext XOR (mostly the float32 pattern of 1.0); distinct salts
+    # make the XOR look uniformly random
+    assert np.unique(xor).size > 64
 
 
 def test_checkpoint_wrong_seed_fails(tmp_path):
@@ -105,6 +146,81 @@ def test_backup_dispatcher_dedup():
     assert d.complete(0) is True
     assert d.complete(0) is False  # duplicate completion deduped
     assert d.duplicates == 1
+
+
+def test_recovery_restores_epoch_n_ckpt_resumes_epoch_n_plus_1(tmp_path):
+    """Recovery x rekeying interplay: the supervisor restores from a sealed
+    checkpoint taken in epoch N and resumes the sealed stream after the
+    directory has ratcheted to epoch N+1 — final state parity with an
+    uninterrupted run (chunks re-seal under whatever the live epoch is)."""
+    from repro.attest.directory import KeyDirectory
+    from repro.attest.measure import IO_ENDPOINT
+    from repro.core.secure_channel import SecureChannel
+
+    TOTAL, CKPT_EVERY, REKEY_AT, FAIL_AT = 12, 5, 6, 9
+    like = {"acc": jnp.zeros((8,), jnp.float32)}
+
+    def build_directory():
+        d = KeyDirectory(seed=5)
+        d.enroll("io/src", IO_ENDPOINT, allow=True)
+        d.enroll("io/snk", IO_ENDPOINT, allow=True)
+        d.establish("stream", "io/src", "io/snk")
+        return d
+
+    def data(step):
+        return jnp.full((8,), float(step + 1), jnp.float32)
+
+    def run(path, injector):
+        directory = build_directory()
+        ch = SecureChannel(directory.handle("stream"))
+        state = {"acc": np.zeros((8,), np.float32), "step": 0}
+
+        def run_steps(start, end):
+            for s in range(start, end):
+                if injector is not None:
+                    injector.maybe_fail(s)
+                if s == REKEY_AT:
+                    directory.advance_epoch()          # epoch N -> N+1
+                hdr, ct, tag, meta = ch.protect(data(s))
+                x, ok = ch.unprotect(hdr, ct, tag, meta)
+                assert bool(ok)
+                state["acc"] = state["acc"] + np.asarray(x)
+                state["step"] = s + 1
+                if state["step"] % CKPT_EVERY == 0:
+                    ckpt.save(path, state["step"], {"acc": state["acc"]}, {},
+                              sealed=True, seed=5,
+                              extra={"epoch": directory.epoch})
+            return state["step"]
+
+        def restore():
+            last = ckpt.latest_step(path)
+            if last is None:
+                return 0
+            step, p, _ = ckpt.restore(path, last, seed=5, params_like=like,
+                                      opt_like={})
+            state["acc"], state["step"] = np.asarray(p["acc"]), step
+            return step
+
+        rep = run_with_recovery(total_steps=TOTAL, run_steps=run_steps,
+                                restore=restore, directory=directory)
+        return state["acc"], rep, directory
+
+    # uninterrupted reference
+    acc_ref, rep_ref, _ = run(str(tmp_path / "ref"), None)
+    assert rep_ref.restarts == 0
+
+    # failure at step 9: restores the step-5 checkpoint (sealed in epoch 0)
+    # while the directory is already at epoch 1
+    inj = FailureInjector(schedule={FAIL_AT: "node_loss"})
+    path = str(tmp_path / "ck")
+    acc, rep, directory = run(path, inj)
+    assert rep.restarts == 1 and rep.replayed_steps > 0
+    assert directory.epoch >= 1                       # resumed post-rekey
+    import json, os
+    man = json.load(open(os.path.join(path, "step-%08d" % CKPT_EVERY,
+                                      "manifest.json")))
+    assert man["extra"]["epoch"] == 0                 # ckpt taken in epoch N
+    assert np.array_equal(acc, acc_ref)               # output parity
 
 
 def test_trainer_end_to_end_with_failure(tmp_path):

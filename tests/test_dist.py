@@ -99,9 +99,9 @@ def test_pp_pipeline_matches_sequential():
 
 
 def test_secure_channel_roundtrip():
+    from repro.attest.directory import ephemeral_edge_key
     from repro.core.secure_channel import protect, unprotect
-    from repro.crypto.keys import derive_stage_key, root_key_from_seed
-    key = derive_stage_key(root_key_from_seed(1), "pp", 0)
+    key = ephemeral_edge_key("pp", seed=1)
     x = jax.random.normal(jax.random.key(2), (4, 6), jnp.bfloat16)
     ct, tag, meta = protect(key, 5, x)
     y, ok = unprotect(key, 5, ct, tag, meta)
@@ -178,12 +178,12 @@ def test_pp_mesh_stage_axis_validated():
 
 
 def test_secure_exchange_roundtrip():
-    from repro.crypto.keys import derive_stage_key, root_key_from_seed
+    from repro.attest.directory import ephemeral_edge_key
     from repro.dist.collectives import exchange, secure_exchange
     mesh = jax.make_mesh((1,), ("model",))
     W = 1
     x = jax.random.normal(jax.random.key(3), (W, W, 16, 4), jnp.float32)
-    key = derive_stage_key(root_key_from_seed(0), "shuffle", 0)
+    key = ephemeral_edge_key("shuffle", seed=0)
     y, ok = secure_exchange(x, mesh, "model", key=key, step=11)
     assert bool(ok.all())
     assert float(jnp.abs(y - jnp.swapaxes(x, 0, 1)).max()) == 0.0
