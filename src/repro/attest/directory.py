@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.attest.handshake import HandshakeEnd, HandshakeError
 from repro.attest.quote import (Quote, QuoteError, QuotePolicy, QuotingKey,
@@ -85,6 +85,17 @@ class EdgeHandle:
 
     def next_counters(self, n: int) -> int:
         return self.directory.next_counters(self.edge, n)
+
+    def reserve_window(self, n: int) -> "Tuple[int, int]":
+        """Atomically reserve a contiguous ``n``-counter block AND snapshot
+        the epoch it belongs to: ``(base, epoch)`` — counters base..base+n-1
+        are valid only under that epoch's key (counters are epoch-local).
+        The window-batched engine reserves one block per sealed window,
+        mirroring how ``secure_exchange`` reserves its W^2 nonce block, so
+        co-consumers of an edge can never land inside the window's block.
+        """
+        return (self.directory.next_counters(self.edge, n),
+                self.directory.session(self.edge).epoch)
 
 
 class KeyDirectory:

@@ -1,3 +1,4 @@
 from repro.core.observable import Observable  # noqa: F401
 from repro.core.pipeline import Pipeline, Stage  # noqa: F401
-from repro.core.enclave import EnclaveExecutor, SealedChunk  # noqa: F401
+from repro.core.enclave import EnclaveExecutor, SealedChunk, \
+    SealedWindow  # noqa: F401

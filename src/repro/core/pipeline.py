@@ -6,16 +6,34 @@ of named stages, each with an operator, a worker count, and a placement
 executor).  Routers between stages apply fair-queue (in) / round-robin
 (out) chunk scheduling — repro.core.router.
 
-Execution is streaming: chunks flow stage to stage; each stage re-keys the
-chunk for its outbound edge.  Per-edge session keys come from a
-``repro.attest.KeyDirectory``: every stage worker is measured
-(repro.attest.measure), enrolled, and admitted only if its quote verifies,
-and edge keys are established by the attested handshake — the trust
-bootstrap the paper assumes pre-done.  ``run(rekey_every_n=...)`` rotates
-every edge key mid-stream (epoch ratchet; old-epoch chunks drain, new
-chunks seal under the new epoch), and ``KeyDirectory.revoke`` evicts a
-worker live — subsequent windows skip it.  Per-stage counters, byte
-totals, and MAC failures feed the benchmarks (paper Fig. 6/7/8).
+Execution is streaming and **window-vectorized**: the unit of device work
+is a window of ``window_chunks`` chunks per worker, not a chunk.  Ingress
+seals whole windows with the batched AEAD fast path behind a small
+prefetch/double-buffer (window N+1's seal is dispatched before window N
+is handed downstream, so it overlaps downstream compute via JAX async
+dispatch), with nonce-counter blocks reserved per window from the
+directory.  Each stage dispatches every worker's per-window queue as ONE
+batched open -> operator -> seal program chain
+(:meth:`repro.core.enclave.EnclaveExecutor.run_static_many`), and MAC
+verdicts are **deferred**: per-row verdicts stay on device and sync to
+host once per window — failed rows are dropped there and counted as
+``mac_failures`` — instead of one blocking ``bool()`` per chunk.
+``window_chunks=1`` degenerates to the original per-chunk engine and is
+kept as the bit-identical oracle.  Batched programs live in the AEAD
+shape-keyed compile cache, so steady-state streaming compiles nothing.
+
+Per-edge session keys come from a ``repro.attest.KeyDirectory``: every
+stage worker is measured (repro.attest.measure), enrolled, and admitted
+only if its quote verifies, and edge keys are established by the attested
+handshake — the trust bootstrap the paper assumes pre-done.
+``run(rekey_every_n=...)`` rotates every edge key mid-stream (epoch
+ratchet); a window straddling a flip opens every row under its ingress
+epoch (per-row keys — rows never cross keystreams), and
+``KeyDirectory.revoke`` evicts a worker live — subsequent windows skip
+it.  Per-stage counters, byte totals, and MAC failures feed the
+benchmarks (paper Fig. 6/7/8); ``StageMetrics.seconds`` is measured at
+window granularity around a ``block_until_ready``, so throughput numbers
+time execution, not async enqueue.
 """
 from __future__ import annotations
 
@@ -24,7 +42,7 @@ import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, \
-    Sequence
+    Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +53,9 @@ from repro.attest.directory import (EdgeHandle, KeyDirectory,
 from repro.attest.measure import IO_ENDPOINT, measure_stage
 from repro.configs.base import SecureStreamConfig
 from repro.core import router as R
-from repro.core.enclave import (EnclaveExecutor, SealedChunk, egress,
-                                ingress)
+from repro.core.enclave import (EnclaveExecutor, SealedChunk, SealedWindow,
+                                egress, egress_window, ingress, plain_window,
+                                seal_tensors_window, uniform_runs)
 
 
 @dataclass
@@ -66,14 +85,60 @@ class StageMetrics:
         return (self.bytes / 1e6) / self.seconds if self.seconds else 0.0
 
 
+# One host rendezvous per window (deferred-verdict sync + block on the
+# window's outputs).  A regression back to per-chunk syncing shows up as
+# this counter growing with the chunk count instead of the window count.
+_HOST_SYNCS = 0
+
+
+def host_sync_count() -> int:
+    """Device->host synchronisation rendezvous performed by the streaming
+    engine (one per window).  Tests assert one sync per window."""
+    return _HOST_SYNCS
+
+
+def reset_host_sync_count() -> None:
+    global _HOST_SYNCS
+    _HOST_SYNCS = 0
+
+
+def _shape_runs(xs: List[jax.Array]):
+    """Consecutive same-(shape, dtype) runs of a tensor list — each run
+    frames as one batched window (ragged tails get their own)."""
+    return uniform_runs(xs, lambda x: (x.shape, x.dtype))
+
+
+def _sync_window(outputs: List[jax.Array],
+                 vec_specs: List[Tuple[Optional[jax.Array], int]]
+                 ) -> np.ndarray:
+    """THE one host sync of a window: block until the window's outputs are
+    ready and materialize every deferred MAC verdict in a single
+    transfer.  ``vec_specs`` is [(device verdict vector or None, n)];
+    None (plain mode) counts as all-pass."""
+    global _HOST_SYNCS
+    _HOST_SYNCS += 1
+    if outputs:
+        jax.block_until_ready(outputs)
+    if all(ok is None for ok, _ in vec_specs):
+        return np.ones(sum(n for _, n in vec_specs), bool)
+    parts = [jnp.ones((n,), bool) if ok is None else ok
+             for ok, n in vec_specs]
+    vec = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return np.asarray(vec)
+
+
 class Pipeline:
     def __init__(self, stages: Sequence[Stage],
                  secure: SecureStreamConfig = SecureStreamConfig(),
                  seed: int = 0,
-                 directory: Optional[KeyDirectory] = None):
+                 directory: Optional[KeyDirectory] = None,
+                 window_chunks: int = 8):
         self.stages = list(stages)
         self.secure = secure
         self.seed = seed
+        # chunks per worker per window: each worker's queue of a window is
+        # ONE batched device dispatch. 1 = the per-chunk oracle engine.
+        self.window_chunks = max(1, int(window_chunks))
         # The directory owns every session key; passing one in (scale_stage,
         # shared trust domain) carries sessions, epoch, and revocations over.
         self.directory = directory if directory is not None \
@@ -156,18 +221,364 @@ class Pipeline:
         return [EnclaveExecutor(st_mode, self.keys[i], self.keys[i + 1])
                 for _ in range(max(1, st.workers))]
 
-    def _stage_stream(self, upstream: Iterator[SealedChunk], st: Stage,
-                      pool: List[EnclaveExecutor]) -> Iterator[SealedChunk]:
-        """Fan a chunk stream across the stage's workers.
+    def _stage_stream(self, upstream: Iterator[SealedWindow], st: Stage,
+                      pool: List[EnclaveExecutor],
+                      window_chunks: int) -> Iterator[SealedWindow]:
+        """Fan a window stream across the stage's workers.
 
-        Outbound edge: round-robin dispatch (paper's Push socket) over the
-        worker pool; inbound edge: fair-queue merge (Pull socket) of the
-        worker sub-streams — both via repro.core.router, so the rr->fq
-        composition preserves stream order.  Chunks that fail their MAC
-        check are dropped (reactive on_error semantics) and counted.
-        Revocation is re-checked per window, so a worker revoked
-        mid-stream stops receiving chunks at the next dispatch.
+        Windows flow as batched device arrays; each round accumulates
+        ``len(live) * window_chunks`` rows, round-robins them over the
+        worker pool by rolling global row index (paper's Push socket —
+        row g goes to worker g mod W, exactly the per-chunk engine's
+        assignment), and runs each worker's share as ONE batched
+        open->op->seal dispatch (a device gather splits the window; the
+        single-worker steady state dispatches the window untouched).  MAC
+        verdicts are deferred: the whole round syncs to host ONCE
+        (`_sync_window`), failed rows are dropped (reactive on_error
+        semantics) and counted, and survivors flow downstream in original
+        stream order — the rr->fq composition of the per-chunk engine,
+        minus dropped rows.  Revocation is re-checked per round
+        (including revocations triggered while the window was being
+        pulled), so a worker revoked mid-stream stops receiving rows at
+        the next dispatch.
         """
+        m = self.metrics[st.name]
+        if len(m.per_worker) < len(pool):
+            m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
+        phase = 0                    # rolling global row index for rr
+        while True:
+            live = self._live_workers(st)
+            target = len(live) * window_chunks
+            parts: List[SealedWindow] = []
+            got = 0
+            while got < target:
+                win = next(upstream, None)
+                if win is None:
+                    break
+                parts.append(win)
+                got += len(win)
+            if not parts:
+                return
+            # pulling the window may itself have revoked workers upstream
+            live = self._live_workers(st)
+            L = len(live)
+            t0 = time.perf_counter()
+            dispatches = []          # (part idx, worker, row idxs, out, ok)
+            for pi, win in enumerate(parts):
+                B = len(win)
+                assign = [(phase + j) % L for j in range(B)]
+                phase += B
+                for k in range(L):
+                    idxs = [j for j in range(B) if assign[j] == k]
+                    if not idxs:
+                        continue
+                    sub = win if len(idxs) == B else win.select(idxs)
+                    w = live[k]
+                    if st.fn is not None:
+                        out, ok = pool[w].run_window(st.fn, sub)
+                    else:
+                        out, ok = pool[w].run_static_window(st.op, st.const,
+                                                            sub)
+                    dispatches.append((pi, w, idxs, out, ok))
+            verdicts = _sync_window(
+                [d[3].words for d in dispatches],
+                [(d[4], len(d[3])) for d in dispatches])
+            # honest window timing: t0 -> after block_until_ready, so
+            # throughput_mbps reflects execution, not async enqueue
+            m.seconds += time.perf_counter() - t0
+            off = 0
+            marks: List[np.ndarray] = []
+            for pi, w, idxs, out, _ in dispatches:
+                v = verdicts[off: off + len(idxs)]
+                off += len(idxs)
+                marks.append(v)
+                for alive in v:
+                    if alive:
+                        m.chunks += 1
+                        m.per_worker[w] += 1
+                        m.bytes += int(parts[pi].n_words) * 4
+                    else:
+                        m.mac_failures += 1
+                        pool[w].errors += 1
+            yield from self._merge_outputs(parts, dispatches, marks)
+
+    @staticmethod
+    def _merge_outputs(parts, dispatches, marks):
+        """Reassemble each input window's surviving rows in original
+        stream order.  The all-survived single-dispatch case (steady
+        state) passes the worker's output through untouched; otherwise
+        one concatenate + one gather rebuilds the window."""
+        for pi in range(len(parts)):
+            ds = [(d, mk) for d, mk in zip(dispatches, marks)
+                  if d[0] == pi]
+            if not ds:
+                continue
+            if len(ds) == 1 and len(ds[0][0][2]) == len(parts[pi]) \
+                    and bool(ds[0][1].all()):
+                yield ds[0][0][3]
+                continue
+            outs = [d[3] for d, _ in ds]
+            cat_w = outs[0].words if len(outs) == 1 \
+                else jnp.concatenate([o.words for o in outs])
+            cat_t = outs[0].tags
+            if cat_t is not None and len(outs) > 1:
+                cat_t = jnp.concatenate([o.tags for o in outs])
+            entries = []             # (orig row, concat pos, counter, epoch)
+            pos = 0
+            for (_, _, idxs, out, _), mk in ds:
+                entries.extend((j, pos + jj, out.counters[jj],
+                                out.epochs[jj])
+                               for jj, j in enumerate(idxs) if mk[jj])
+                pos += len(idxs)
+            if not entries:
+                continue
+            entries.sort()
+            sel = jnp.asarray(np.asarray([e[1] for e in entries], np.int32))
+            yield SealedWindow(
+                words=cat_w[sel],
+                tags=None if cat_t is None else cat_t[sel],
+                counters=[e[2] for e in entries],
+                epochs=[e[3] for e in entries],
+                meta=outs[0].meta, n_words=outs[0].n_words)
+
+    def _ingress_stream(self, source: Iterable[jax.Array], mode: str,
+                        rekey_every_n: Optional[int],
+                        window: int) -> Iterator[SealedWindow]:
+        """Seal source tensors window-at-a-time with a prefetch
+        double-buffer: window N+1's (async) batched seal is dispatched
+        BEFORE window N is handed downstream, so sealing overlaps
+        downstream compute via JAX async dispatch.
+
+        Each window reserves its nonce-counter blocks from the directory's
+        managed per-edge counter (``EdgeHandle.reserve_window`` — the same
+        discipline as ``secure_exchange``'s W^2 block), NOT a per-run
+        enumerate: a second ``run()`` on the same pipeline (or a
+        ``scale_stage`` continuation, which deliberately keeps the
+        sessions) continues the count instead of resealing fresh plaintext
+        under already-used (key, nonce) pairs.  ``rekey_every_n`` keeps
+        its per-chunk cadence: a window is sealed as consecutive
+        (epoch, shape)-uniform groups, each in one ``seal_many`` program,
+        with ``advance_epoch`` firing between groups exactly where the
+        per-chunk engine would have fired it — so rotation resets the
+        managed counter, counters stay epoch-local, and chunks sealed just
+        before a flip carry their epoch and drain under the old key.
+        """
+        it = iter(source)
+        n_plain = 0
+        prev: Optional[List[SealedWindow]] = None
+        while True:
+            xs = list(itertools.islice(it, window))
+            if not xs:
+                break
+            if mode == "plain":
+                cur = [plain_window(range(n_plain + j,
+                                          n_plain + j + len(sub)), sub)
+                       for j, sub in _shape_runs(xs)]
+                n_plain += len(xs)
+            else:
+                cur = self._seal_ingress_window(xs, rekey_every_n)
+            if prev is not None:
+                yield from prev
+            prev = cur
+        if prev is not None:
+            yield from prev
+
+    def _seal_ingress_window(self, xs: List[jax.Array],
+                             rekey: Optional[int]) -> List[SealedWindow]:
+        """One sealed ingress window: (epoch, shape)-grouped batched seals
+        over directory-reserved counter blocks."""
+        h0 = self.keys[0]
+        wins: List[SealedWindow] = []
+        i = 0
+        while i < len(xs):
+            sess = self.directory.session(h0.edge)
+            if rekey and sess.chunks >= rekey:
+                self.directory.advance_epoch()
+                sess = self.directory.session(h0.edge)
+            room = len(xs) - i if not rekey else max(1, rekey - sess.chunks)
+            group = xs[i:i + room]
+            for _, sub in _shape_runs(group):
+                base, epoch = h0.reserve_window(len(sub))
+                wins.append(seal_tensors_window(
+                    h0, range(base, base + len(sub)), sub, epoch=epoch))
+            i += len(group)
+        return wins
+
+    def _clamp_window_for_rekey(self, wc: int, rekey_every_n: int) -> int:
+        """Largest safe window factor for this rekey cadence.
+
+        Chunks open under the epoch they were ingressed in, so the
+        directory's ``epoch_history`` must cover the deepest possible
+        in-flight lag.  The windowed engine buffers up to one window per
+        stage, two ingress windows (the prefetch double-buffer), and one
+        egress window; ``window_chunks=1`` dispatches to the per-chunk
+        oracle engine, whose in-flight depth is only one window per stage
+        (+1 being ingressed) — exactly the seed engine's bound, so a
+        combination is rejected up front only if the seed engine would
+        also have rejected it; otherwise the window is silently clamped
+        to the safe size (down to the oracle if need be).
+        """
+        S = sum(max(1, s.workers) for s in self.stages)
+        w0 = max(1, self.stages[0].workers) if self.stages else 1
+        wl = max(1, self.stages[-1].workers) if self.stages else 1
+        hist = self.directory.epoch_history
+
+        seed_in_flight = S + 1              # the per-chunk oracle's depth
+        seed_lag = -(-seed_in_flight // rekey_every_n) + 1
+        if seed_lag > hist:
+            raise ValueError(
+                f"rekey_every_n={rekey_every_n} can rotate "
+                f"{seed_lag} epochs while up to {seed_in_flight} chunks "
+                f"are in flight, but KeyDirectory(epoch_history="
+                f"{hist}) would prune keys "
+                f"still needed to drain — raise epoch_history or "
+                f"rekey_every_n")
+
+        def lag(w: int) -> int:
+            in_flight = (S + 2 * w0 + wl) * w + 1
+            return -(-in_flight // rekey_every_n) + 1
+
+        while wc > 1 and lag(wc) > hist:
+            wc -= 1
+        return wc
+
+    def run(self, source: Iterable[jax.Array],
+            on_result: Optional[Callable] = None,
+            rekey_every_n: Optional[int] = None,
+            window_chunks: Optional[int] = None) -> Any:
+        """Stream source tensors through all stages; returns the terminal
+        reduce value (if the last stage reduces) or the last chunk.
+
+        ``rekey_every_n``: rotate every edge session key after each N
+        source chunks (KeyDirectory.advance_epoch) — mid-stream, without
+        draining the pipeline.  Chunks open under the epoch they were
+        ingressed in (windows straddling a flip use per-row keys), and the
+        window factor is clamped so the directory's ``epoch_history``
+        always covers the deepest in-flight lag (rejected up front if even
+        the per-chunk engine could drain past history).
+
+        ``window_chunks`` overrides the pipeline's window factor for this
+        run; 1 is the per-chunk oracle engine.
+        """
+        mode = self.secure.mode
+        wc = self.window_chunks if window_chunks is None \
+            else max(1, int(window_chunks))
+        if rekey_every_n and mode != "plain":
+            wc = self._clamp_window_for_rekey(wc, rekey_every_n)
+        if wc == 1:
+            # the per-chunk oracle engine: scalar seal/open per chunk
+            # with a blocking verdict sync per chunk (the seed engine,
+            # kept as the degenerate case / bitwise oracle)
+            return self._run_chunked(source, on_result, rekey_every_n)
+        w0 = max(1, self.stages[0].workers) if self.stages else 1
+        stream: Iterator[SealedWindow] = self._ingress_stream(
+            source, mode, rekey_every_n, w0 * wc)
+
+        # compose map/filter stages up to the terminal reduce (if any)
+        reduce_idx = next((i for i, s in enumerate(self.stages)
+                           if s.reduce_fn is not None), None)
+        end = len(self.stages) if reduce_idx is None else reduce_idx
+        for i in range(end):
+            st = self.stages[i]
+            stream = self._stage_stream(stream, st,
+                                        self._worker_pool(i, st), wc)
+        sink_w = max(1, self.stages[end - 1].workers) if end else 1
+        egress_rows = sink_w * wc
+
+        if reduce_idx is not None:
+            # terminal reduce: decrypt at the sink edge (trusted
+            # subscriber), a window at a time, and fold in stream order;
+            # the reduce swallows the stream.
+            st = self.stages[reduce_idx]
+            m = self.metrics[st.name]
+            reduce_state: Any = None
+            reduce_started = False
+            for groups, verdicts, dt in self._egress_windows(
+                    stream, mode, self.keys[reduce_idx], egress_rows):
+                t0 = time.perf_counter()
+                off = 0
+                for win, vals in groups:
+                    for j in range(len(win)):
+                        if not verdicts[off + j]:
+                            m.mac_failures += 1
+                            continue
+                        if not reduce_started:
+                            reduce_state = st.reduce_init
+                            reduce_started = True
+                        reduce_state = st.reduce_fn(reduce_state, vals[j])
+                        m.chunks += 1
+                        m.bytes += int(win.n_words) * 4
+                    off += len(win)
+                m.seconds += dt + (time.perf_counter() - t0)
+            return reduce_state if reduce_started else None
+
+        final = None
+        for groups, verdicts, _ in self._egress_windows(
+                stream, mode, self.keys[len(self.stages)], egress_rows):
+            off = 0
+            for win, vals in groups:
+                for j in range(len(win)):
+                    final = vals[j]
+                    if on_result is not None and verdicts[off + j]:
+                        on_result(vals[j])
+                off += len(win)
+        return final
+
+    def _egress_windows(self, stream: Iterator[SealedWindow], mode: str,
+                        key, window: int):
+        """Open the terminal stream a window at a time (batched
+        ``open_many`` per framing-uniform window, ONE deferred-verdict
+        host sync per window).  Yields ([(window, opened tensor batch)],
+        verdicts, seconds) — ``seconds`` spans dispatch through the
+        blocking sync, so sink timing is honest."""
+        parts: List[SealedWindow] = []
+        got = 0
+        for win in stream:
+            parts.append(win)
+            got += len(win)
+            if got >= window:
+                yield self._open_egress(parts, mode, key)
+                parts, got = [], 0
+        if parts:
+            yield self._open_egress(parts, mode, key)
+
+    def _open_egress(self, parts: List[SealedWindow], mode: str, key):
+        t0 = time.perf_counter()
+        groups = []
+        specs = []
+        for win in parts:
+            vals, ok = egress_window(mode, key, win)
+            groups.append((win, vals))
+            specs.append((ok, len(win)))
+        verdicts = _sync_window([v for _, v in groups], specs)
+        return groups, verdicts, time.perf_counter() - t0
+
+    # ------------------------------------- per-chunk oracle (window_chunks=1)
+
+    def _ingress_stream_chunked(self, source: Iterable[jax.Array],
+                                mode: str, rekey_every_n: Optional[int]
+                                ) -> Iterator[SealedChunk]:
+        """Scalar per-chunk ingress (the oracle engine): one eager seal
+        and one managed counter per chunk, rekey checked per chunk."""
+        n_plain = 0
+        for x in source:
+            if mode == "plain":
+                yield ingress(mode, None, n_plain, x)
+                n_plain += 1
+                continue
+            h0 = self.keys[0]
+            if rekey_every_n and \
+                    self.directory.session(h0.edge).chunks >= rekey_every_n:
+                self.directory.advance_epoch()
+            yield ingress(mode, h0, h0.next_counter(), x)
+
+    def _stage_stream_chunked(self, upstream: Iterator[SealedChunk],
+                              st: Stage, pool: List[EnclaveExecutor]
+                              ) -> Iterator[SealedChunk]:
+        """The per-chunk oracle: scalar open->op->seal per chunk with a
+        blocking ``bool(ok)`` host sync per chunk — round-robin dispatch
+        over the pool, fair-queue merge of the worker sub-streams."""
+        global _HOST_SYNCS
         m = self.metrics[st.name]
         if len(m.per_worker) < len(pool):
             m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
@@ -186,6 +597,8 @@ class Pipeline:
                         out = pool[w].run(st.fn, chunk)
                     else:
                         out = pool[w].run_static(st.op, st.const, chunk)
+                    if pool[w].mode != "plain":
+                        _HOST_SYNCS += 1       # the scalar bool(ok) sync
                     m.seconds += time.perf_counter() - t0
                     if out is None:
                         m.mac_failures += 1
@@ -197,75 +610,24 @@ class Pipeline:
                 worker_outs.append(outs)
             yield from R.fair_queue(worker_outs)
 
-    def _ingress_stream(self, source: Iterable[jax.Array], mode: str,
-                        rekey_every_n: Optional[int]
-                        ) -> Iterator[SealedChunk]:
-        """Seal source tensors; rotate every edge key each N chunks.
-
-        Ingress counters are allocated from the directory's managed
-        per-edge counter, NOT a per-run enumerate: a second ``run()`` on
-        the same pipeline (or a ``scale_stage`` continuation, which
-        deliberately keeps the sessions) continues the count instead of
-        resealing fresh plaintext under already-used (key, nonce) pairs.
-        Rotation resets the managed counter, keeping counters epoch-local
-        (the nonce-exhaustion guard in repro.crypto.keys never trips on a
-        rotating stream); chunks sealed just before a flip carry their
-        epoch and drain under the old key while new chunks seal under the
-        new one.
-        """
-        n_plain = 0
-        for x in source:
-            if mode == "plain":
-                yield ingress(mode, None, n_plain, x)
-                n_plain += 1
-                continue
-            h0 = self.keys[0]
-            if rekey_every_n and \
-                    self.directory.session(h0.edge).chunks >= rekey_every_n:
-                self.directory.advance_epoch()
-            yield ingress(mode, h0, h0.next_counter(), x)
-
-    def run(self, source: Iterable[jax.Array],
-            on_result: Optional[Callable] = None,
-            rekey_every_n: Optional[int] = None) -> Any:
-        """Stream source tensors through all stages; returns the terminal
-        reduce value (if the last stage reduces) or the last chunk.
-
-        ``rekey_every_n``: rotate every edge session key after each N
-        source chunks (KeyDirectory.advance_epoch) — mid-stream, without
-        draining the pipeline.  Chunks open under the epoch they were
-        ingressed in, so the directory's ``epoch_history`` must cover the
-        deepest possible in-flight lag (checked up front: every stage
-        window can buffer up to its worker count of chunks).
-        """
+    def _run_chunked(self, source: Iterable[jax.Array],
+                     on_result: Optional[Callable],
+                     rekey_every_n: Optional[int]) -> Any:
+        """The original streaming engine, chunk by chunk (the
+        ``window_chunks=1`` degenerate case)."""
+        global _HOST_SYNCS
         mode = self.secure.mode
-        if rekey_every_n and mode != "plain":
-            # worst-case chunks in flight = one window per stage (+1 being
-            # ingressed); an old chunk may lag that many rotations behind
-            in_flight = sum(max(1, s.workers) for s in self.stages) + 1
-            lag = -(-in_flight // rekey_every_n) + 1   # ceil + safety
-            if lag > self.directory.epoch_history:
-                raise ValueError(
-                    f"rekey_every_n={rekey_every_n} can rotate "
-                    f"{lag} epochs while up to {in_flight} chunks are in "
-                    f"flight, but KeyDirectory(epoch_history="
-                    f"{self.directory.epoch_history}) would prune keys "
-                    f"still needed to drain — raise epoch_history or "
-                    f"rekey_every_n")
-        stream: Iterator[SealedChunk] = self._ingress_stream(
+        stream: Iterator[SealedChunk] = self._ingress_stream_chunked(
             source, mode, rekey_every_n)
-
-        # compose map/filter stages up to the terminal reduce (if any)
         reduce_idx = next((i for i, s in enumerate(self.stages)
                            if s.reduce_fn is not None), None)
         end = len(self.stages) if reduce_idx is None else reduce_idx
         for i in range(end):
             st = self.stages[i]
-            stream = self._stage_stream(stream, st, self._worker_pool(i, st))
+            stream = self._stage_stream_chunked(stream, st,
+                                                self._worker_pool(i, st))
 
         if reduce_idx is not None:
-            # terminal reduce: decrypt at the sink edge (trusted subscriber)
-            # and fold; the reduce swallows the stream.
             st = self.stages[reduce_idx]
             m = self.metrics[st.name]
             reduce_state: Any = None
@@ -273,6 +635,8 @@ class Pipeline:
             for chunk in stream:
                 t0 = time.perf_counter()
                 val, ok = egress(mode, self.keys[reduce_idx], chunk)
+                if mode != "plain":
+                    _HOST_SYNCS += 1
                 if not bool(ok):
                     m.mac_failures += 1
                     continue
@@ -288,6 +652,8 @@ class Pipeline:
         final = None
         for chunk in stream:
             result, ok = egress(mode, self.keys[len(self.stages)], chunk)
+            if mode != "plain":
+                _HOST_SYNCS += 1
             final = result
             if on_result is not None and bool(ok):
                 on_result(result)
@@ -311,7 +677,8 @@ class Pipeline:
             else s for s in self.stages
         ]
         p = Pipeline(stages, self.secure, seed=self.seed,
-                     directory=self.directory)
+                     directory=self.directory,
+                     window_chunks=self.window_chunks)
         for sname, m in self.metrics.items():
             pw = list(m.per_worker)
             if sname == name and len(pw) < workers:

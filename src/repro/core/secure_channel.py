@@ -99,6 +99,31 @@ class SecureChannel:
         step, epoch = header
         return unprotect(self.handle.key(epoch), step, ct, tag, meta)
 
+    def protect_window(self, xs: jax.Array):
+        """Seal a (B, *item) window in ONE batched program under ONE
+        atomically reserved counter block (EdgeHandle.reserve_window) —
+        co-consumers of the edge can never land inside the block, and
+        every row shares the window's epoch snapshot.
+
+        -> ((base_step, epoch) header, ct (B, n_words), tags (B, 2), meta).
+        """
+        B = xs.shape[0]
+        base, epoch = self.handle.reserve_window(B)
+        k = self.handle.key(epoch)
+        ct, tags, meta = protect_many([k] * B, range(base, base + B), xs)
+        return (base, epoch), ct, tags, meta
+
+    def unprotect_window(self, header: Tuple[int, int], cts: jax.Array,
+                         tags: jax.Array, meta: Tuple):
+        """Open a sealed window: -> ((B, *item), ok (B,) verdicts).  The
+        header pins (base_step, epoch), so windows sealed before an epoch
+        flip still open after it — the drain path, batched."""
+        base, epoch = header
+        B = cts.shape[0]
+        k = self.handle.key(epoch)
+        return unprotect_many([k] * B, range(base, base + B), cts, tags,
+                              meta)
+
 
 def sealed_ppermute(key, step: int, x: jax.Array, axis: str,
                     perm) -> Tuple[jax.Array, jax.Array]:

@@ -81,6 +81,66 @@ OPS: Dict[str, Callable] = {
 }
 
 
+def _enclave_rows_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref, data_ref,
+                         out_ref, *, op: str, const: float):
+    """Per-row (key, nonce, counter) variant: the window-batched executor.
+
+    Every VMEM row is one cipher block carrying its own key/nonce/counter
+    columns, so a whole window of chunks (each chunk = a run of rows
+    sharing its nonce, counters 1..n_blocks) is ONE grid sweep — the
+    batched sibling of ``_enclave_kernel``, with the same VMEM-confined
+    plaintext guarantee: decrypt, operator, re-encrypt never leave the
+    tile.
+    """
+    kin = [kin_ref[:, i] for i in range(8)]        # 8 x (rows,)
+    kout = [kout_ref[:, i] for i in range(8)]
+    nonce = [nonce_ref[:, i] for i in range(3)]    # 3 x (rows,)
+    counters = ctr_ref[...]                        # (rows,)
+
+    # ---- decrypt (plaintext exists only from here ...)
+    ks_in = keystream_vectors(kin, nonce, counters)
+    pt = data_ref[...] ^ jnp.stack(ks_in, axis=-1)
+    # ---- the enclaved operator
+    y = OPS[op](pt, const)
+    # ---- re-encrypt (... to here — never written to HBM)
+    ks_out = keystream_vectors(kout, nonce, counters)
+    out_ref[...] = y ^ jnp.stack(ks_out, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "const", "block_rows",
+                                             "interpret"))
+def enclave_apply_rows(keys_in: jax.Array, keys_out: jax.Array,
+                       nonces: jax.Array, counters: jax.Array,
+                       data_rows: jax.Array, *, op: str = "identity",
+                       const: float = 0.0, block_rows: int = 256,
+                       interpret: bool = True) -> jax.Array:
+    """Apply ``op`` to ciphertext rows with per-row cipher parameters.
+
+    data_rows: (R, 16) u32 ciphertext; keys_in/keys_out: (R, 8) u32;
+    nonces: (R, 3) u32; counters: (R,) u32.  R % block_rows == 0.  Row r
+    is decrypted under (keys_in[r], nonces[r], counters[r]), transformed,
+    and re-encrypted under keys_out[r] at the same (nonce, counter).
+    """
+    R = data_rows.shape[0]
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_enclave_rows_kernel, op=op, const=const),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(data_rows.shape, U32),
+        interpret=interpret,
+    )(keys_in.astype(U32), keys_out.astype(U32), nonces.astype(U32),
+      counters.astype(U32), data_rows)
+
+
 def _enclave_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref, data_ref, out_ref,
                     *, op: str, const: float, block_rows: int):
     pid = pl.program_id(0)

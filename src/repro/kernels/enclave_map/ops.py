@@ -1,9 +1,11 @@
-"""Public op wrapper for the enclave executor kernel."""
+"""Public op wrappers for the enclave executor kernels."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.enclave_map.enclave_map import enclave_apply, OPS  # noqa: F401
+from repro.kernels.enclave_map.enclave_map import (  # noqa: F401
+    OPS, enclave_apply, enclave_apply_rows)
 
 
 def _on_tpu() -> bool:
@@ -15,3 +17,29 @@ def enclave_map(key_in, key_out, nonce, counter0, data_blocks, *, op,
     return enclave_apply(key_in, key_out, nonce, counter0, data_blocks,
                          op=op, const=const, block_rows=block_rows,
                          interpret=not _on_tpu())
+
+
+def enclave_map_rows(keys_in, keys_out, nonces, counters, rows, *, op,
+                     const=0.0, block_rows: int = 256):
+    """Per-row fused decrypt->op->encrypt over (R, 16) u32 rows.
+
+    keys_in/keys_out: (8,) shared or (R, 8) per-row (mixed-epoch windows
+    carry per-row keys); nonces: (R, 3); counters: (R,).  Auto-pads R to
+    a tile multiple (padded tail rows use zero cipher parameters and are
+    sliced off).  One grid sweep processes a whole window of chunks.
+    """
+    R = rows.shape[0]
+    ones = jnp.ones((R, 1), jnp.uint32)
+    kin = keys_in.reshape(1, 8) * ones if keys_in.ndim == 1 else keys_in
+    kout = keys_out.reshape(1, 8) * ones if keys_out.ndim == 1 else keys_out
+    pad = (-R) % block_rows
+    if pad:
+        kin = jnp.pad(kin, ((0, pad), (0, 0)))
+        kout = jnp.pad(kout, ((0, pad), (0, 0)))
+        nonces = jnp.pad(nonces, ((0, pad), (0, 0)))
+        counters = jnp.pad(counters, (0, pad))
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    out = enclave_apply_rows(kin, kout, nonces, counters, rows, op=op,
+                             const=const, block_rows=block_rows,
+                             interpret=not _on_tpu())
+    return out[:R]

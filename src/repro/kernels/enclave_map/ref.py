@@ -17,3 +17,14 @@ def enclave_apply_ref(key_in, key_out, nonce, counter0, data_blocks, *,
     ct = chacha20.encrypt_words(key_out, nonce, y.reshape(-1),
                                 counter0=int(counter0))
     return ct.reshape(data_blocks.shape)
+
+
+def enclave_apply_rows_ref(keys_in, keys_out, nonces, counters, data_rows, *,
+                           op="identity", const=0.0):
+    """Row-batched oracle: per-row (key, nonce, counter) decrypt -> op ->
+    re-encrypt, mirroring ``enclave_apply_rows`` (plaintext visible)."""
+    ks_in = chacha20.chacha20_block_rows(keys_in, nonces, counters)
+    pt = data_rows ^ ks_in
+    y = OPS[op](pt, const)
+    ks_out = chacha20.chacha20_block_rows(keys_out, nonces, counters)
+    return y ^ ks_out

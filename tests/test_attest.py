@@ -321,12 +321,36 @@ def test_8stage_rekey_and_revocation_bit_identical():
     pw = p.report()["s3"]["per_worker"]
     assert len(pw) == 2 and pw[1] < pw[0]
 
+    # ---- the WINDOW-BATCHED engine must agree bit-for-bit too: with
+    # epoch_history covering the deeper windowed in-flight lag, whole
+    # windows straddle the rekey flips (window 16 chunks vs rekey
+    # every 3), so every batched open resolves per-row ingress epochs.
+    pb = Pipeline(_stage8(), SecureStreamConfig(mode="encrypted"),
+                  directory=KeyDirectory(seed=0, epoch_history=64),
+                  window_chunks=8)
+
+    def source_b():
+        for i, c in enumerate(src):
+            if i == 4:
+                pb.directory.revoke(Pipeline.worker_id("s3", 1))
+            yield c
+
+    got_b = []
+    pb.run(source_b(), on_result=lambda r: got_b.append(np.asarray(r)),
+           rekey_every_n=3)
+    assert pb.directory.epoch >= 2
+    assert not pb.directory.is_admitted(Pipeline.worker_id("s3", 1))
+    assert len(got_b) == len(got_static)
+    for a, b in zip(got_b, got_static):
+        assert np.array_equal(a, b)                    # bit-identical
+
 
 def test_rekey_never_reuses_a_key_nonce_pair(monkeypatch):
     """Regression: chunk counters are epoch-local, so an executor that
     resealed a drained old-epoch chunk under the *current* epoch would
     collide with the new epoch's own counters — a two-time pad.  Spy on
-    every AEAD seal across a rekey+revocation run and assert no
+    every AEAD seal across a rekey+revocation run — the scalar path AND
+    every row of the window-batched ``seal_many`` path — and assert no
     (key, nonce) pair is ever issued twice."""
     from repro.configs.base import SecureStreamConfig
     from repro.core.pipeline import Pipeline
@@ -334,14 +358,26 @@ def test_rekey_never_reuses_a_key_nonce_pair(monkeypatch):
 
     seen = set()
     real_seal = aead.seal
+    real_seal_many = aead.seal_many
 
-    def spy(key, nonce, words):
-        kn = (np.asarray(key).tobytes(), np.asarray(nonce).tobytes())
+    def record(key_row, nonce_row):
+        kn = (np.asarray(key_row).tobytes(), np.asarray(nonce_row).tobytes())
         assert kn not in seen, "(key, nonce) pair reused across epochs"
         seen.add(kn)
+
+    def spy(key, nonce, words):
+        record(key, nonce)
         return real_seal(key, nonce, words)
 
+    def spy_many(key, nonces, words, **kw):
+        key = np.asarray(key)
+        for b in range(np.asarray(nonces).shape[0]):
+            record(key if key.ndim == 1 else key[b],
+                   np.asarray(nonces)[b])
+        return real_seal_many(key, nonces, words, **kw)
+
     monkeypatch.setattr(aead, "seal", spy)
+    monkeypatch.setattr(aead, "seal_many", spy_many)
     p = Pipeline(_stage8()[:4], SecureStreamConfig(mode="encrypted"))
     src = [jnp.full((16,), float(i + 1), jnp.float32) for i in range(9)]
 
