@@ -8,6 +8,8 @@ machine-readable ``BENCH_<name>.json`` artifact for the CI perf trajectory.
 from __future__ import annotations
 
 import argparse
+import ast
+import importlib.util
 import json
 import platform
 import sys
@@ -31,8 +33,27 @@ MODULES = [
 ]
 
 
+def _bench_descriptions() -> str:
+    """One line per registered bench, sourced from each module's
+    docstring (ast-parsed from source — no jax import just for --help)."""
+    lines = ["registered benchmarks:"]
+    for name, mod in MODULES:
+        try:
+            spec = importlib.util.find_spec(mod)
+            with open(spec.origin, "r") as f:
+                doc = ast.get_docstring(ast.parse(f.read())) or ""
+            first = doc.strip().splitlines()[0] if doc.strip() else \
+                "(no module docstring)"
+        except Exception as e:                      # noqa: BLE001
+            first = f"(unreadable: {e})"
+        lines.append(f"  {name:16s} {first}")
+    return "\n".join(lines)
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=_bench_descriptions())
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="alias for --quick (CI smoke pass)")

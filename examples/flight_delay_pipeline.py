@@ -2,46 +2,38 @@
 
 Computes per-carrier average delay + delayed-flight counts over a synthetic
 BTS-style stream under any of the three Fig.-6 security configurations,
-with elastic per-stage worker scaling.
+with elastic per-stage worker scaling — declared in a few lines via the
+fluent DSL (``repro.dsl``; pass ``--spec`` to load the equivalent TOML
+spec instead).  See docs/dsl.md for the Listing-1/Listing-2 mapping.
 
 Run:  PYTHONPATH=src python examples/flight_delay_pipeline.py \
           --mode enclave --workers 2 --records 65536
 """
 import argparse
+import os
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import SecureStreamConfig
-from repro.core import Pipeline, Stage
-from repro.data.synthetic import CARRIER_WORD, DELAY_WORD, flight_chunks
+from repro.data.synthetic import flight_chunks
+from repro.dsl import load_spec, stream
 
 CARRIERS = 20
 
+SPEC_PATH = os.path.join(os.path.dirname(__file__), "flight_delay.toml")
 
-def build_pipeline(mode: str, workers: int) -> Pipeline:
-    def reduce_fn(acc, chunk):
-        carrier = np.asarray(chunk[:, CARRIER_WORD]).astype(np.int64)
-        delay = np.asarray(chunk[:, DELAY_WORD]).astype(np.int64)
-        valid = delay > 0
-        acc["count"] = acc["count"] + np.bincount(carrier[valid],
-                                                  minlength=CARRIERS)
-        acc["sum"] = acc["sum"] + np.bincount(
-            carrier[valid], weights=delay[valid], minlength=CARRIERS)
-        return acc
 
-    return Pipeline(
-        [
-            Stage("sgx_mapper", op="identity", workers=workers, sgx=True),
-            Stage("sgx_filter", op="delay_filter_u32", const=15,
-                  workers=workers, sgx=True),
-            Stage("reducer", op="custom", reduce_fn=reduce_fn,
-                  reduce_init={"count": np.zeros(CARRIERS),
-                               "sum": np.zeros(CARRIERS)}),
-        ],
-        SecureStreamConfig(mode=mode),
-    )
+def build_pipeline(mode: str, workers: int):
+    """The paper's Listing-1 job, fluent form.  The TOML spec next to
+    this file is the declarative equivalent: both compile through the
+    same validator/fusion path and produce bit-identical results
+    (stage *structure* can differ only where fusion rules apply)."""
+    return (stream()
+            .map("identity", name="sgx_mapper", workers=workers, sgx=True)
+            .filter("delay_filter_u32", const=15, name="sgx_filter",
+                    workers=workers, sgx=True)
+            .reduce("carrier_delay_stats", name="reducer")
+            .secure(mode))
 
 
 def main() -> None:
@@ -51,9 +43,17 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--records", type=int, default=65_536)
     ap.add_argument("--chunk", type=int, default=1024)
+    ap.add_argument("--spec", action="store_true",
+                    help=f"build from the TOML spec ({SPEC_PATH}) instead "
+                         f"of the fluent chain")
     args = ap.parse_args()
 
-    pipe = build_pipeline(args.mode, args.workers)
+    if args.spec:
+        pipe = (load_spec(SPEC_PATH).secure(args.mode)
+                .scale("sgx_mapper", args.workers)
+                .scale("sgx_filter", args.workers))
+    else:
+        pipe = build_pipeline(args.mode, args.workers)
     src = (jnp.asarray(c) for c in
            flight_chunks(args.records, args.chunk * args.workers, seed=1))
     t0 = time.perf_counter()
@@ -63,6 +63,7 @@ def main() -> None:
 
     print(f"mode={args.mode} workers={args.workers} "
           f"records={args.records} ({mb:.1f} MB)")
+    print(f"pipeline: {pipe.describe()}")
     print(f"completed in {dt:.2f}s  ({mb / dt:.2f} MB/s)")
     print(f"{'carrier':>8} {'delayed':>9} {'avg delay':>10}")
     for c in range(CARRIERS):

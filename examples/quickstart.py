@@ -1,13 +1,22 @@
-"""Quickstart: the paper's Listing-2 program + a 3-stage secure pipeline.
+"""Quickstart: the paper's Listing-2 program + the secure pipeline DSL.
+
+Three forms of the same idea, shortest first:
+
+* ``listing2_average_age`` — the paper's RxLua Listing 2 on the
+  plaintext Observable layer;
+* ``secure_flight_pipeline`` — the DelayedFlights job in 5 fluent lines
+  (``repro.dsl.stream``), running under full enclave mode;
+* ``secure_flight_pipeline_spec`` — the same job from a declarative
+  TOML spec (the paper's Listing-1 shape).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import SecureStreamConfig
-from repro.core import Observable, Pipeline, Stage
-from repro.data.synthetic import CARRIER_WORD, DELAY_WORD, flight_chunks
+from repro.core import Observable
+from repro.data.synthetic import flight_chunks
+from repro.dsl import load_spec, stream
 
 
 def listing2_average_age():
@@ -29,33 +38,36 @@ def listing2_average_age():
 
 
 def secure_flight_pipeline():
-    """map -> filter -> reduce over sealed flight records (enclave mode)."""
-    def reduce_fn(acc, chunk):
-        carrier = np.asarray(chunk[:, CARRIER_WORD]).astype(np.int64)
-        delay = np.asarray(chunk[:, DELAY_WORD]).astype(np.int64)
-        valid = delay > 0
-        acc["count"] = acc["count"] + np.bincount(carrier[valid], minlength=20)
-        acc["sum"] = acc["sum"] + np.bincount(
-            carrier[valid], weights=delay[valid], minlength=20)
-        return acc
-
-    pipe = Pipeline(
-        [
-            Stage("sgx_mapper", op="identity", sgx=True),
-            Stage("sgx_filter", op="delay_filter_u32", const=15, sgx=True),
-            Stage("reducer", op="custom", reduce_fn=reduce_fn,
-                  reduce_init={"count": np.zeros(20), "sum": np.zeros(20)}),
-        ],
-        SecureStreamConfig(mode="enclave"),
-    )
-    out = pipe.run(jnp.asarray(c) for c in flight_chunks(8192, 1024))
+    """map -> filter -> reduce over sealed flight records (enclave mode),
+    via the fluent DSL — the paper's few-lines-of-code claim."""
+    sb = (stream(flight_chunks(8192, 1024))
+          .map("identity", name="sgx_mapper", sgx=True)
+          .filter("delay_filter_u32", const=15, name="sgx_filter", sgx=True)
+          .reduce("carrier_delay_stats", name="reducer"))
+    out = sb.run(mode="enclave")
     worst = int(np.argmax(out["sum"] / np.maximum(out["count"], 1)))
     print(f"delayed flights: {int(out['count'].sum())}; "
           f"worst carrier: #{worst} "
           f"(avg {out['sum'][worst] / max(out['count'][worst], 1):.1f} min)")
-    print("stage report:", pipe.report())
+    print("stage report:", sb.report())
+
+
+def secure_flight_pipeline_spec():
+    """The same job, declared as a TOML spec (paper Listing 1)."""
+    spec = """
+    mode = "enclave"
+    [stage.sgx_filter]
+    op = "delay_filter_u32"
+    const = 15
+    constraint = "type==sgx"          # the paper's literal spelling
+    [stage.reducer]
+    reduce = "carrier_delay_stats"
+    """
+    out = load_spec(spec).run(flight_chunks(8192, 1024))
+    print(f"spec form agrees: delayed flights = {int(out['count'].sum())}")
 
 
 if __name__ == "__main__":
     listing2_average_age()
     secure_flight_pipeline()
+    secure_flight_pipeline_spec()

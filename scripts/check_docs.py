@@ -1,0 +1,150 @@
+"""Docs sanity gate (CI `docs` job): link resolution + fence syntax.
+
+Checks, without importing jax or executing anything:
+
+* every *internal* markdown link in docs/*.md and README.md resolves —
+  the file exists, and when the link carries a ``#fragment`` a matching
+  heading exists in the target (GitHub slug rules: lowercase, spaces to
+  dashes, punctuation dropped);
+* every fenced ``python`` block parses (``compile``), including blocks
+  marked ``skip``;
+* every fence is terminated.
+
+Execution of the runnable blocks is the separate, heavier
+``tests/test_docs_examples.py`` (needs jax).  Exits non-zero with a
+per-finding report on any failure.
+
+Run:  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def github_slug(heading: str) -> str:
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", h.strip())
+
+
+def headings_of(path: Path) -> set:
+    out = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.strip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            out.add(github_slug(m.group(1)))
+    return out
+
+
+def strip_fences(text: str):
+    """Yield (line_no, line) for lines outside fenced blocks."""
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if line.strip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield i, line
+
+
+def check_links(path: Path, problems: list) -> None:
+    for ln, line in strip_fences(path.read_text()):
+        for target in _LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, frag = target.partition("#")
+            dest = (path.parent / file_part).resolve() if file_part \
+                else path
+            if file_part and not dest.exists():
+                problems.append(f"{path.relative_to(ROOT)}:{ln}: broken "
+                                f"link target {target!r}")
+                continue
+            if frag and dest.suffix == ".md":
+                if github_slug(frag) not in headings_of(dest):
+                    problems.append(
+                        f"{path.relative_to(ROOT)}:{ln}: link anchor "
+                        f"#{frag} not found in {dest.name}")
+
+
+def extract_fenced_blocks(path: Path):
+    """THE fenced-block scanner — single definition shared by this
+    syntax gate and ``tests/test_docs_examples.py`` (which imports it),
+    so 'what counts as a fenced block' cannot drift between the two.
+
+    -> ([(lang, info, code, first_line_no)], problems): ``lang`` is the
+    fence's language tag (lowercased, "" for untyped), ``info`` the rest
+    of the info string (e.g. ``skip``); an unterminated fence is a
+    problem, not a block.
+    """
+    blocks, problems = [], []
+    lang = info = None
+    buf: list = []
+    start = 0
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        m = _FENCE.match(line.strip())
+        if m and lang is None:
+            lang = m.group(1).lower()
+            info = m.group(2).strip().lower()
+            buf, start = [], i + 1
+        elif line.strip() == "```" and lang is not None:
+            blocks.append((lang, info, "\n".join(buf), start))
+            lang = info = None
+        elif lang is not None:
+            buf.append(line)
+    if lang is not None:
+        problems.append(f"{path.name}:{start}: unterminated ``` fence")
+    return blocks, problems
+
+
+def check_fences(path: Path, problems: list) -> None:
+    blocks, fence_problems = extract_fenced_blocks(path)
+    problems.extend(f"{path.relative_to(ROOT)}{p[p.index(':'):]}"
+                    for p in fence_problems)
+    for lang, _info, code, start in blocks:
+        if lang != "python":
+            continue
+        try:
+            compile(code, f"{path.name}:{start}", "exec")
+        except SyntaxError as e:
+            problems.append(
+                f"{path.relative_to(ROOT)}:{start}: python fence "
+                f"does not parse: {e.msg} (line {e.lineno})")
+
+
+def main() -> int:
+    problems: list = []
+    for path in DOC_FILES:
+        if not path.exists():
+            problems.append(f"missing doc file: {path.relative_to(ROOT)}")
+            continue
+        check_links(path, problems)
+        check_fences(path, problems)
+    for guide in ("architecture", "security-model", "dsl", "benchmarks"):
+        if not (ROOT / "docs" / f"{guide}.md").exists():
+            problems.append(f"required guide missing: docs/{guide}.md")
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"check_docs: OK ({len(DOC_FILES)} files, links + fences clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

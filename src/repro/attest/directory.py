@@ -32,14 +32,16 @@ from repro.crypto.keys import StageKey
 
 
 class KeyDirectoryError(RuntimeError):
-    pass
+    """Any directory-level failure (enrollment, admission, counters)."""
 
 
 class NoSessionError(KeyDirectoryError):
-    pass
+    """An edge has no established (or no longer drainable) session."""
 
 
 class RevokedWorkerError(KeyDirectoryError):
+    """A quarantined worker id was used where trust is required."""
+
     def __init__(self, worker_id: str, detail: str = ""):
         super().__init__(f"worker {worker_id!r} is revoked"
                          + (f": {detail}" if detail else ""))
@@ -58,6 +60,10 @@ class SessionState:
     keys: Dict[int, StageKey] = field(default_factory=dict)  # epoch -> key
 
     def key_at(self, epoch: int) -> StageKey:
+        """This edge's key at ``epoch`` — chunks always open/re-seal
+        under their *ingress* epoch (epoch-local counters; a later
+        epoch's key would replay its (key, nonce) pairs).  Raises
+        :class:`NoSessionError` once history has pruned the epoch."""
         k = self.keys.get(epoch)
         if k is None:
             raise NoSessionError(
@@ -74,16 +80,22 @@ class EdgeHandle:
     edge: str
 
     def key(self, epoch: Optional[int] = None) -> StageKey:
+        """The edge's live key (or its key at a past, undrained epoch)."""
         return self.directory.edge_key(self.edge, epoch=epoch)
 
     @property
     def epoch(self) -> int:
+        """The edge's current epoch (advances on every rotation)."""
         return self.directory.session(self.edge).epoch
 
     def next_counter(self) -> int:
+        """Allocate the next managed chunk counter (epoch-local)."""
         return self.directory.next_counter(self.edge)
 
     def next_counters(self, n: int) -> int:
+        """Reserve ``n`` contiguous counters, returning the first — a
+        consumer sealing n items per round MUST take the whole block
+        (see :meth:`KeyDirectory.next_counters`)."""
         return self.directory.next_counters(self.edge, n)
 
     def reserve_window(self, n: int) -> "Tuple[int, int]":
@@ -116,6 +128,7 @@ class KeyDirectory:
     # ------------------------------------------------------------ clock
 
     def tick(self, n: int = 1) -> int:
+        """Advance the logical clock quote freshness is judged against."""
         self.clock += n
         return self.clock
 
@@ -146,6 +159,9 @@ class KeyDirectory:
 
     def verify(self, q: Quote,
                expect_report_data: Optional[bytes] = None) -> None:
+        """Check a quote against the policy (allowlist, freshness,
+        revocation, report-data binding); raises on any failure —
+        revoked ids surface as :class:`RevokedWorkerError`."""
         try:
             verify_quote(self._qk, q, self.policy, now=self.clock,
                          expect_report_data=expect_report_data)
@@ -161,6 +177,7 @@ class KeyDirectory:
         return q
 
     def is_admitted(self, worker_id: str) -> bool:
+        """Non-raising :meth:`admit` (pool-membership checks)."""
         try:
             self.admit(worker_id)
             return True
@@ -208,9 +225,12 @@ class KeyDirectory:
         return key
 
     def has_session(self, edge: str) -> bool:
+        """True if ``edge`` has a live established session."""
         return edge in self._sessions
 
     def session(self, edge: str) -> SessionState:
+        """The edge's live :class:`SessionState`; raises
+        :class:`NoSessionError` before :meth:`establish` has run."""
         st = self._sessions.get(edge)
         if st is None:
             raise NoSessionError(
@@ -219,10 +239,13 @@ class KeyDirectory:
         return st
 
     def edge_key(self, edge: str, *, epoch: Optional[int] = None) -> StageKey:
+        """The edge's session key at ``epoch`` (current when None)."""
         st = self.session(edge)
         return st.key_at(st.epoch if epoch is None else epoch)
 
     def handle(self, edge: str) -> EdgeHandle:
+        """Capability view of an established edge — what sealing code
+        holds instead of a raw key, so rotation is picked up live."""
         self.session(edge)                    # must exist
         return EdgeHandle(self, edge)
 
@@ -244,6 +267,7 @@ class KeyDirectory:
         return c
 
     def edges(self) -> List[str]:
+        """Names of every edge with a live session."""
         return list(self._sessions)
 
     # ------------------------------------------------------- rotation

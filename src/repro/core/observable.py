@@ -31,10 +31,42 @@ Chunk = Any  # array or dict-of-arrays
 
 @dataclass(frozen=True)
 class Op:
+    """One node of an operator chain.
+
+    Shared vocabulary between this plaintext Observable layer and the
+    secure-pipeline DSL (:mod:`repro.dsl.builder`): the DSL's fluent
+    chain is a tuple of these same nodes, with ``meta`` carrying the
+    paper's Listing-1 stage attributes (``name``, ``workers``, ``sgx``
+    placement, static ``op``/``const``).  ``describe_ops`` renders either
+    chain identically; ``StreamBuilder.as_observable`` lowers a DSL chain
+    back onto an Observable (the cleartext oracle).
+    """
     kind: str                     # map | filter | reduce | window | key_by
     fn: Optional[Callable] = None
     init: Any = None
     meta: Dict[str, Any] = field(default_factory=dict)
+
+
+def describe_ops(ops: Tuple[Op, ...]) -> str:
+    """One-line summary of an op chain — ``map(identity)[w=4,sgx] ->
+    filter(delay_filter_u32) -> reduce`` — shared by
+    :meth:`Observable.describe` and ``StreamBuilder.describe`` so the
+    two layers print pipelines in one vocabulary."""
+    parts = []
+    for o in ops:
+        name = o.meta.get("op") or getattr(o.fn, "__name__", None) \
+            or o.meta.get("reducer") or ""
+        label = f"{o.kind}({name})" if name and name != "<lambda>" \
+            else o.kind
+        attrs = []
+        if o.meta.get("workers", 1) != 1:
+            attrs.append(f"w={o.meta['workers']}")
+        if o.meta.get("sgx"):
+            attrs.append("sgx")
+        if attrs:
+            label += f"[{','.join(attrs)}]"
+        parts.append(label)
+    return " -> ".join(parts) if parts else "(empty)"
 
 
 class Observable:
@@ -148,3 +180,7 @@ class Observable:
     @property
     def ops(self) -> Tuple[Op, ...]:
         return self._ops
+
+    def describe(self) -> str:
+        """One-line op-chain summary (see :func:`describe_ops`)."""
+        return describe_ops(self._ops)

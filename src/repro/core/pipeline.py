@@ -60,6 +60,22 @@ from repro.core.enclave import (EnclaveExecutor, SealedChunk, SealedWindow,
 
 @dataclass
 class Stage:
+    """One named pipeline stage — the paper's Listing-1 unit.
+
+    ``op`` names a statically registered operator
+    (``repro.kernels.enclave_map.ops.OPS`` — the only code attestable
+    under ``mode="enclave"``) or ``"custom"`` when ``fn``/``reduce_fn``
+    carries a Python callable (plain/encrypted modes only).  ``workers``
+    is the stage's fan-out pool size; ``sgx`` is the paper's
+    ``constraint:type==sgx`` placement flag (non-sgx stages run on the
+    encrypted, non-enclave path when the pipeline mode is ``enclave``).
+    A stage with ``reduce_fn`` is terminal: it folds decrypted chunks at
+    the trusted sink edge, seeded with ``reduce_init``.
+
+    Stages are usually not built by hand anymore — ``repro.dsl.stream``
+    / ``repro.dsl.load_spec`` compile to this dataclass (bit-identically;
+    the hand-built form is kept as the tests' parity oracle).
+    """
     name: str
     op: str                              # static registry op name, or "custom"
     const: float = 0.0
@@ -72,6 +88,10 @@ class Stage:
 
 @dataclass
 class StageMetrics:
+    """Per-stage counters behind ``Pipeline.report()`` (paper Fig. 6-8):
+    surviving chunks, payload bytes, execution seconds (measured around a
+    ``block_until_ready`` at window granularity), MAC failures (dropped
+    rows), and per-worker chunk counts from the round-robin fan-out."""
     chunks: int = 0
     bytes: int = 0
     seconds: float = 0.0
@@ -82,6 +102,7 @@ class StageMetrics:
 
     @property
     def throughput_mbps(self) -> float:
+        """Payload MB/s over the stage's measured execution seconds."""
         return (self.bytes / 1e6) / self.seconds if self.seconds else 0.0
 
 
@@ -98,6 +119,7 @@ def host_sync_count() -> int:
 
 
 def reset_host_sync_count() -> None:
+    """Zero the rendezvous counter (test setup)."""
     global _HOST_SYNCS
     _HOST_SYNCS = 0
 
@@ -128,14 +150,29 @@ def _sync_window(outputs: List[jax.Array],
 
 
 class Pipeline:
+    """An executable secure dataflow: ordered :class:`Stage` list +
+    routers + per-edge attested session keys, streamed by the
+    window-vectorized engine (see the module docstring for the execution
+    model and its invariants — epoch-carrying chunks, directory-reserved
+    nonce-counter blocks, counter continuation across ``run()`` calls).
+
+    ``fusion`` is builder metadata from ``repro.dsl.compile``: a
+    ``{"fused_from": {survivor: [absorbed stage names]}, "decisions":
+    [...]}`` record of bit-exact stage merges, surfaced via
+    :meth:`report` — hand-built pipelines simply leave it empty.
+    """
+
     def __init__(self, stages: Sequence[Stage],
                  secure: SecureStreamConfig = SecureStreamConfig(),
                  seed: int = 0,
                  directory: Optional[KeyDirectory] = None,
-                 window_chunks: int = 8):
+                 window_chunks: int = 8,
+                 fusion: Optional[Dict[str, Any]] = None):
         self.stages = list(stages)
         self.secure = secure
         self.seed = seed
+        # DSL-compiler provenance (stage merges); never read on the hot path
+        self.fusion: Dict[str, Any] = dict(fusion or {})
         # chunks per worker per window: each worker's queue of a window is
         # ONE batched device dispatch. 1 = the per-chunk oracle engine.
         self.window_chunks = max(1, int(window_chunks))
@@ -159,6 +196,8 @@ class Pipeline:
 
     @staticmethod
     def worker_id(stage_name: str, w: int) -> str:
+        """Directory identity of worker ``w`` of a stage — the id
+        ``KeyDirectory.revoke`` takes to evict it live."""
         return f"{stage_name}/w{w}"
 
     def _setup_attestation(self) -> None:
@@ -678,7 +717,8 @@ class Pipeline:
         ]
         p = Pipeline(stages, self.secure, seed=self.seed,
                      directory=self.directory,
-                     window_chunks=self.window_chunks)
+                     window_chunks=self.window_chunks,
+                     fusion=self.fusion)
         for sname, m in self.metrics.items():
             pw = list(m.per_worker)
             if sname == name and len(pw) < workers:
@@ -687,11 +727,22 @@ class Pipeline:
         return p
 
     def report(self) -> Dict[str, Dict[str, Any]]:
-        return {
+        """Per-stage metrics dict (chunks, bytes, seconds, MB/s, MAC
+        failures, per-worker counts).  Stages the DSL compiler merged
+        carry a ``fused_from`` list, and a top-level ``"fusion"`` entry
+        logs every fusion decision (taken or declined) — both absent for
+        hand-built pipelines, whose report shape is unchanged."""
+        fused_from = self.fusion.get("fused_from", {})
+        out: Dict[str, Dict[str, Any]] = {
             name: {"chunks": m.chunks, "bytes": m.bytes,
                    "seconds": round(m.seconds, 4),
                    "throughput_mbps": round(m.throughput_mbps, 2),
                    "mac_failures": m.mac_failures,
-                   "per_worker": list(m.per_worker)}
+                   "per_worker": list(m.per_worker),
+                   **({"fused_from": list(fused_from[name])}
+                      if name in fused_from else {})}
             for name, m in self.metrics.items()
         }
+        if self.fusion.get("decisions"):
+            out["fusion"] = {"decisions": list(self.fusion["decisions"])}
+        return out

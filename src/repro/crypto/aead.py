@@ -304,6 +304,8 @@ def tensor_to_words(x: jax.Array) -> Tuple[jax.Array, Tuple]:
 
 
 def words_to_tensor(words: jax.Array, meta: Tuple) -> jax.Array:
+    """Inverse of :func:`tensor_to_words`: rebuild the original tensor
+    from its flat u32 words and framing ``meta`` (shape, dtype, pad)."""
     shape, dtype, pad = meta
     if dtype == "uint32":
         return words.reshape(shape)

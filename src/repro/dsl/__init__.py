@@ -1,0 +1,15 @@
+"""repro.dsl — the fluent pipeline DSL + declarative spec loader.
+
+The paper's "implement secure processing pipelines in just few lines of
+code" surface for this engine: :func:`stream` (fluent Listing-2 style),
+:func:`load_spec` (declarative Listing-1 style, TOML/dict), both
+compiling through :mod:`repro.dsl.compile` to the window-vectorized
+:class:`repro.core.pipeline.Pipeline` with zero hot-path overhead.
+See ``docs/dsl.md`` for the tutorial.
+"""
+from repro.dsl.builder import StreamBuilder, stream  # noqa: F401
+from repro.dsl.compile import (DSLValidationError,  # noqa: F401
+                               compile_pipeline)
+from repro.dsl.reducers import (REDUCERS, register_reducer,  # noqa: F401
+                                resolve_reducer)
+from repro.dsl.spec import SpecError, load_spec, parse_toml  # noqa: F401

@@ -1,0 +1,73 @@
+"""Documentation cannot rot: every fenced ``python`` block in docs/*.md
+and README.md must execute.
+
+Blocks run file by file in a shared namespace (notebook semantics — a
+guide may build on its earlier snippets).  A block whose fence info
+string contains ``skip`` (e.g. ```` ```python skip ````) is not
+executed, but it must still *compile* — syntax errors fail either way.
+
+The fence scanner itself is imported from ``scripts/check_docs.py`` (the
+dependency-free CI syntax gate), so both gates share one definition of
+"a fenced block".
+"""
+import importlib.util
+import os
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", ROOT / "scripts" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def extract_fenced_blocks(path: Path):
+    """-> [(lang, info, code, first_line_no)]; unterminated fences fail."""
+    blocks, problems = check_docs.extract_fenced_blocks(path)
+    assert not problems, problems
+    return blocks
+
+
+def python_blocks(path: Path):
+    return [(i, c, ln) for (la, i, c, ln) in extract_fenced_blocks(path)
+            if la == "python"]
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_doc_python_blocks_compile(path):
+    blocks = python_blocks(path)
+    for info, code, ln in blocks:
+        compile(code, f"{path.name}:{ln}", "exec")   # skip-marked included
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_doc_python_blocks_execute(path):
+    blocks = python_blocks(path)
+    runnable = [(c, ln) for info, c, ln in blocks if "skip" not in info]
+    if not runnable:
+        pytest.skip(f"{path.name}: no runnable python blocks")
+    ns = {"__name__": f"docs_example_{path.stem.replace('-', '_')}"}
+    cwd = os.getcwd()
+    os.chdir(ROOT)                       # docs examples may use repo paths
+    try:
+        for code, ln in runnable:
+            try:
+                exec(compile(code, f"{path.name}:{ln}", "exec"), ns)
+            except Exception as e:
+                raise AssertionError(
+                    f"{path.name}: fenced block at line {ln} raised "
+                    f"{type(e).__name__}: {e}") from e
+    finally:
+        os.chdir(cwd)
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    """The four guides exist and README links to each of them."""
+    readme = (ROOT / "README.md").read_text()
+    for guide in ("architecture", "security-model", "dsl", "benchmarks"):
+        assert (ROOT / "docs" / f"{guide}.md").is_file(), f"missing {guide}"
+        assert f"docs/{guide}.md" in readme, f"README must link {guide}"
