@@ -1,12 +1,37 @@
-"""Benchmark utilities: timing + CSV emission (`name,us_per_call,derived`)."""
+"""Benchmark utilities: timing + CSV emission (`name,us_per_call,derived`)
+plus the shared provenance block every JSON artifact embeds."""
 from __future__ import annotations
 
+import platform
+import subprocess
 import time
-from typing import Any, Callable, List, Tuple
+from datetime import datetime, timezone
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 
 Row = Tuple[str, float, str]
+
+
+def bench_meta() -> Dict[str, Any]:
+    """Provenance of a benchmark artifact: git SHA, UTC timestamp, jax /
+    python versions, backend, platform.  Embedded in every
+    ``BENCH_*.json`` so a number can always be tied back to the commit
+    and environment that produced it."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {
+        "git_sha": sha,
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+    }
 
 
 def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5) -> float:

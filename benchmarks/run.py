@@ -15,7 +15,7 @@ import platform
 import sys
 import traceback
 
-from benchmarks.common import emit
+from benchmarks.common import bench_meta, emit
 
 MODULES = [
     ("ecall", "benchmarks.bench_ecall"),                 # §5.3 µbench 1
@@ -93,7 +93,8 @@ def main() -> None:
             json.dump({"rows": collected, "failed": failed,
                        "quick": bool(args.quick),
                        "backend": jax.default_backend(),
-                       "python": platform.python_version()}, f, indent=1)
+                       "python": platform.python_version(),
+                       "meta": bench_meta()}, f, indent=1)
         print(f"# wrote {path} ({len(collected)} rows)", file=sys.stderr)
     if failed:
         raise SystemExit(f"{failed} benchmark modules failed")

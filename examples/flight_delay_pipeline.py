@@ -46,6 +46,9 @@ def main() -> None:
     ap.add_argument("--spec", action="store_true",
                     help=f"build from the TOML spec ({SPEC_PATH}) instead "
                          f"of the fluent chain")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record per-window spans and write a Chrome-trace "
+                         "JSON here (open in chrome://tracing / Perfetto)")
     args = ap.parse_args()
 
     if args.spec:
@@ -54,6 +57,8 @@ def main() -> None:
                 .scale("sgx_filter", args.workers))
     else:
         pipe = build_pipeline(args.mode, args.workers)
+    if args.trace:
+        pipe = pipe.trace()
     src = (jnp.asarray(c) for c in
            flight_chunks(args.records, args.chunk * args.workers, seed=1))
     t0 = time.perf_counter()
@@ -73,6 +78,10 @@ def main() -> None:
     print("stage report:")
     for name, rep in pipe.report().items():
         print(f"  {name:12s} {rep}")
+    if args.trace:
+        pipe.tracer.export_chrome(args.trace)
+        print(f"wrote {args.trace} ({len(pipe.tracer)} spans) — open in "
+              f"chrome://tracing or https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -134,7 +134,8 @@ def main() -> int:
             continue
         check_links(path, problems)
         check_fences(path, problems)
-    for guide in ("architecture", "security-model", "dsl", "benchmarks"):
+    for guide in ("architecture", "security-model", "dsl", "benchmarks",
+                  "observability"):
         if not (ROOT / "docs" / f"{guide}.md").exists():
             problems.append(f"required guide missing: docs/{guide}.md")
     if problems:

@@ -16,7 +16,12 @@ its :class:`repro.crypto.keys.StageKey` from a directory edge, never from
   bounded history so in-flight chunks sealed in epoch N still open after
   the flip to N+1;
 * revokes workers live: :meth:`revoke` quarantines an id (its quotes stop
-  verifying, pools skip it) and tears down any session it terminates.
+  verifying, pools skip it) and tears down any session it terminates;
+* owns the trust domain's **security audit log**
+  (:class:`repro.obs.audit.AuditLog`): rekeys, revocations, quote
+  rejections, and nonce-space exhaustion are recorded in stream order as
+  they happen — the engine appends its data-plane events (MAC failures,
+  evictions) to the same log, so one ordered stream covers the run.
 """
 from __future__ import annotations
 
@@ -28,7 +33,9 @@ from repro.attest.handshake import HandshakeEnd, HandshakeError
 from repro.attest.quote import (Quote, QuoteError, QuotePolicy, QuotingKey,
                                 verify_quote)
 from repro.attest.rotation import key_from_bytes, ratchet_key
-from repro.crypto.keys import StageKey
+from repro.crypto.keys import (NONCE_COUNTER_MAX, NonceExhaustedError,
+                               StageKey)
+from repro.obs.audit import AuditLog
 
 
 class KeyDirectoryError(RuntimeError):
@@ -114,9 +121,15 @@ class KeyDirectory:
     """Attestation verifier + key-establishment service + key store."""
 
     def __init__(self, seed: int = 0, policy: Optional[QuotePolicy] = None,
-                 *, epoch_history: int = 8):
+                 *, epoch_history: int = 8,
+                 audit: Optional[AuditLog] = None):
         self.seed = seed
         self.policy = policy if policy is not None else QuotePolicy()
+        # THE security audit log of this trust domain: lifecycle events
+        # are recorded here by the directory itself; the streaming engine
+        # appends its data-plane events (mac_failure, eviction) so one
+        # in-order stream covers the whole run.
+        self.audit = audit if audit is not None else AuditLog()
         self.epoch = 0
         self.epoch_history = max(1, int(epoch_history))
         self.clock = 0                       # logical time for quote ages
@@ -166,6 +179,8 @@ class KeyDirectory:
             verify_quote(self._qk, q, self.policy, now=self.clock,
                          expect_report_data=expect_report_data)
         except QuoteError as e:
+            self.audit.record("quote_rejected", worker=q.worker_id,
+                              reason=e.reason)
             if e.reason == "revoked":
                 raise RevokedWorkerError(q.worker_id, str(e)) from e
             raise
@@ -262,6 +277,13 @@ class KeyDirectory:
         if n < 1:
             raise KeyDirectoryError(f"counter block size must be >= 1: {n}")
         st = self.session(edge)
+        if st.chunks + n - 1 > NONCE_COUNTER_MAX:
+            self.audit.record("nonce_exhausted", edge=edge, epoch=st.epoch,
+                              chunks=st.chunks, requested=n)
+            raise NonceExhaustedError(
+                f"edge {edge!r} would exhaust its nonce space at epoch "
+                f"{st.epoch}: {st.chunks} counters used, {n} requested "
+                f"(max {NONCE_COUNTER_MAX}) — advance_epoch to reset")
         c = st.chunks
         st.chunks += n
         return c
@@ -286,6 +308,8 @@ class KeyDirectory:
             for e in [e for e in st.keys
                       if e <= self.epoch - self.epoch_history]:
                 del st.keys[e]
+        self.audit.record("rekey", epoch=self.epoch,
+                          edges=len(self._sessions))
         self.tick()
         return self.epoch
 
@@ -308,6 +332,8 @@ class KeyDirectory:
                    if worker_id in (st.left, st.right)]
         for e in dropped:
             del self._sessions[e]
+        self.audit.record("revocation", worker=worker_id,
+                          edges=list(dropped))
         self.tick()
         return dropped
 

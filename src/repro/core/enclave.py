@@ -40,6 +40,7 @@ from repro.crypto import aead, chacha20, cwmac
 from repro.crypto.keys import StageKey, current_epoch as _cur_epoch, \
     resolve_key as _key_at
 from repro.kernels.enclave_map import ops as enclave_ops
+from repro.obs.trace import NULL_TRACER
 
 U32 = jnp.uint32
 
@@ -303,6 +304,13 @@ class EnclaveExecutor:
         self.key_out = key_out
         self.block_rows = block_rows
         self.errors = 0
+        # Telemetry hooks: the pipeline's worker pool stamps each executor
+        # with the run's tracer and a per-worker track ("s2/w1") so the
+        # open->op->seal phase spans land on that worker's timeline.
+        # Spans here measure *enqueue* (dispatch is async); device time
+        # lands in the pipeline's per-window sync span.
+        self.tracer = NULL_TRACER
+        self.track = "enclave"
 
     # -- generic python/jnp operator (plain + encrypted modes) --------------
 
@@ -389,13 +397,19 @@ class EnclaveExecutor:
                 "enclave mode only executes registered static operators "
                 "(run_static_window); arbitrary closures cannot be "
                 "attested — the paper's no-dynamic-linking rule.")
-        keys_in, nonces_in = _window_cipher_params(self.key_in, win)
-        pt, ok = aead.open_many(keys_in, nonces_in, win.words, win.tags)
-        xb = aead.words_to_tensor_batch(pt, win.meta)
-        yb = jnp.stack([fn(xb[b]) for b in range(len(win))])
-        words, meta = aead.tensor_to_words_batch(yb)
-        keys_out, nonces_out = _window_cipher_params(self.key_out, win)
-        ct, tags = aead.seal_many(keys_out, nonces_out, words)
+        with self.tracer.span("enclave.open", cat="dispatch",
+                              track=self.track, rows=len(win)):
+            keys_in, nonces_in = _window_cipher_params(self.key_in, win)
+            pt, ok = aead.open_many(keys_in, nonces_in, win.words, win.tags)
+        with self.tracer.span("enclave.op", cat="dispatch",
+                              track=self.track, rows=len(win)):
+            xb = aead.words_to_tensor_batch(pt, win.meta)
+            yb = jnp.stack([fn(xb[b]) for b in range(len(win))])
+            words, meta = aead.tensor_to_words_batch(yb)
+        with self.tracer.span("enclave.seal", cat="dispatch",
+                              track=self.track, rows=len(win)):
+            keys_out, nonces_out = _window_cipher_params(self.key_out, win)
+            ct, tags = aead.seal_many(keys_out, nonces_out, words)
         return replace(win, words=ct, tags=tags, meta=meta,
                        n_words=words.shape[1]), ok
 
@@ -417,31 +431,45 @@ class EnclaveExecutor:
         keys_in, nonces_in = _window_cipher_params(self.key_in, win)
         keys_out, nonces_out = _window_cipher_params(self.key_out, win)
         if self.mode == "encrypted":
-            pt, ok = aead.open_many(keys_in, nonces_in, win.words, win.tags)
-            words = _apply_static_words(op, const, pt)
-            ct, tags = aead.seal_many(keys_out, nonces_out, words)
+            with self.tracer.span("enclave.open", cat="dispatch",
+                                  track=self.track, rows=len(win)):
+                pt, ok = aead.open_many(keys_in, nonces_in,
+                                        win.words, win.tags)
+            with self.tracer.span("enclave.op", cat="dispatch",
+                                  track=self.track, op=op, rows=len(win)):
+                words = _apply_static_words(op, const, pt)
+            with self.tracer.span("enclave.seal", cat="dispatch",
+                                  track=self.track, rows=len(win)):
+                ct, tags = aead.seal_many(keys_out, nonces_out, words)
             return replace(win, words=ct, tags=tags), ok
         # enclave: MAC check on ciphertext happens outside the enclave
         # (public data), batched: one mac-key derivation + one MAC program.
         B, n_words = len(win), win.n_words
         n_blocks = (n_words + 15) // 16
-        mk_in = aead.derive_mac_keys_many(keys_in, nonces_in)
-        ok = jnp.all(aead.mac2_many(win.words, mk_in) == win.tags, axis=-1)
+        with self.tracer.span("enclave.open", cat="dispatch",
+                              track=self.track, rows=B):
+            mk_in = aead.derive_mac_keys_many(keys_in, nonces_in)
+            ok = jnp.all(aead.mac2_many(win.words, mk_in) == win.tags,
+                         axis=-1)
         # fused decrypt->op->encrypt over the window's flattened rows;
         # payload keystream offset is counter0=1 per chunk.
-        rows = _blocks_batch(win.words).reshape(-1, 16)
-        row_nonces = jnp.repeat(nonces_in, n_blocks, axis=0)
-        row_ctrs = jnp.tile(jnp.arange(1, n_blocks + 1, dtype=U32), B)
-        row_kin = keys_in if keys_in.ndim == 1 \
-            else jnp.repeat(keys_in, n_blocks, axis=0)
-        row_kout = keys_out if keys_out.ndim == 1 \
-            else jnp.repeat(keys_out, n_blocks, axis=0)
-        out_words = enclave_ops.enclave_map_rows(
-            row_kin, row_kout, row_nonces, row_ctrs, rows, op=op,
-            const=const).reshape(B, -1)[:, :n_words]
+        with self.tracer.span("enclave.op", cat="dispatch",
+                              track=self.track, op=op, rows=B):
+            rows = _blocks_batch(win.words).reshape(-1, 16)
+            row_nonces = jnp.repeat(nonces_in, n_blocks, axis=0)
+            row_ctrs = jnp.tile(jnp.arange(1, n_blocks + 1, dtype=U32), B)
+            row_kin = keys_in if keys_in.ndim == 1 \
+                else jnp.repeat(keys_in, n_blocks, axis=0)
+            row_kout = keys_out if keys_out.ndim == 1 \
+                else jnp.repeat(keys_out, n_blocks, axis=0)
+            out_words = enclave_ops.enclave_map_rows(
+                row_kin, row_kout, row_nonces, row_ctrs, rows, op=op,
+                const=const).reshape(B, -1)[:, :n_words]
         # re-tag under the outbound keys, batched
-        mk_out = aead.derive_mac_keys_many(keys_out, nonces_out)
-        tags_out = aead.mac2_many(out_words, mk_out)
+        with self.tracer.span("enclave.seal", cat="dispatch",
+                              track=self.track, rows=B):
+            mk_out = aead.derive_mac_keys_many(keys_out, nonces_out)
+            tags_out = aead.mac2_many(out_words, mk_out)
         return replace(win, words=out_words, tags=tags_out), ok
 
     # -- chunk-list wrappers over the window entry points -------------------

@@ -56,6 +56,8 @@ from repro.core import router as R
 from repro.core.enclave import (EnclaveExecutor, SealedChunk, SealedWindow,
                                 egress, egress_window, ingress, plain_window,
                                 seal_tensors_window, uniform_runs)
+from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -101,27 +103,44 @@ class StageMetrics:
     per_worker: List[int] = field(default_factory=list)
 
     @property
-    def throughput_mbps(self) -> float:
-        """Payload MB/s over the stage's measured execution seconds."""
-        return (self.bytes / 1e6) / self.seconds if self.seconds else 0.0
+    def throughput_mbps(self) -> Optional[float]:
+        """Payload MB/s over the stage's measured execution seconds.
+
+        ``None`` means *nothing was measured yet* (no execution seconds
+        recorded) — distinct from a genuine ``0.0``, which means time
+        passed but no payload survived (every row MAC-failed)."""
+        if self.seconds <= 0.0:
+            return None
+        return (self.bytes / 1e6) / self.seconds
+
+    @property
+    def mac_failure_rate(self) -> Optional[float]:
+        """Fraction of rows this stage dropped to MAC failures; ``None``
+        before the stage has seen any row at all."""
+        seen = self.chunks + self.mac_failures
+        if seen == 0:
+            return None
+        return self.mac_failures / seen
 
 
 # One host rendezvous per window (deferred-verdict sync + block on the
 # window's outputs).  A regression back to per-chunk syncing shows up as
 # this counter growing with the chunk count instead of the window count.
-_HOST_SYNCS = 0
+# Registered in the process-wide metrics registry; the module-level
+# functions below are the original API, kept as thin shims.
+_HOST_SYNCS = _METRICS.counter("pipeline.host_syncs")
 
 
 def host_sync_count() -> int:
     """Device->host synchronisation rendezvous performed by the streaming
-    engine (one per window).  Tests assert one sync per window."""
-    return _HOST_SYNCS
+    engine (one per window).  Tests assert one sync per window.  Shim
+    over the registered counter ``pipeline.host_syncs``."""
+    return int(_HOST_SYNCS.value)
 
 
 def reset_host_sync_count() -> None:
     """Zero the rendezvous counter (test setup)."""
-    global _HOST_SYNCS
-    _HOST_SYNCS = 0
+    _HOST_SYNCS.reset()
 
 
 def _shape_runs(xs: List[jax.Array]):
@@ -131,22 +150,25 @@ def _shape_runs(xs: List[jax.Array]):
 
 
 def _sync_window(outputs: List[jax.Array],
-                 vec_specs: List[Tuple[Optional[jax.Array], int]]
-                 ) -> np.ndarray:
+                 vec_specs: List[Tuple[Optional[jax.Array], int]],
+                 tracer=NULL_TRACER, track: str = "main") -> np.ndarray:
     """THE one host sync of a window: block until the window's outputs are
     ready and materialize every deferred MAC verdict in a single
     transfer.  ``vec_specs`` is [(device verdict vector or None, n)];
-    None (plain mode) counts as all-pass."""
-    global _HOST_SYNCS
-    _HOST_SYNCS += 1
-    if outputs:
-        jax.block_until_ready(outputs)
-    if all(ok is None for ok, _ in vec_specs):
-        return np.ones(sum(n for _, n in vec_specs), bool)
-    parts = [jnp.ones((n,), bool) if ok is None else ok
-             for ok, n in vec_specs]
-    vec = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-    return np.asarray(vec)
+    None (plain mode) counts as all-pass.  The ``sync.verdicts`` span is
+    where device time surfaces on a timeline — dispatch spans upstream
+    only measure (async) enqueue."""
+    _HOST_SYNCS.inc()
+    with tracer.span("sync.verdicts", cat="sync", track=track,
+                     rows=sum(n for _, n in vec_specs)):
+        if outputs:
+            jax.block_until_ready(outputs)
+        if all(ok is None for ok, _ in vec_specs):
+            return np.ones(sum(n for _, n in vec_specs), bool)
+        parts = [jnp.ones((n,), bool) if ok is None else ok
+                 for ok, n in vec_specs]
+        vec = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        return np.asarray(vec)
 
 
 class Pipeline:
@@ -167,10 +189,18 @@ class Pipeline:
                  seed: int = 0,
                  directory: Optional[KeyDirectory] = None,
                  window_chunks: int = 8,
-                 fusion: Optional[Dict[str, Any]] = None):
+                 fusion: Optional[Dict[str, Any]] = None,
+                 tracer=None):
         self.stages = list(stages)
         self.secure = secure
         self.seed = seed
+        # span tracing is strictly off by default: NULL_TRACER's span()
+        # returns a shared no-op context manager, so the instrumented
+        # paths cost an attribute call when tracing is disabled
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # worker ids whose eviction has already been audit-logged (the
+        # engine records each revoked worker's first skipped dispatch once)
+        self._evicted_logged: set = set()
         # DSL-compiler provenance (stage merges); never read on the hot path
         self.fusion: Dict[str, Any] = dict(fusion or {})
         # chunks per worker per window: each worker's queue of a window is
@@ -238,9 +268,16 @@ class Pipeline:
         the only bit that can flip mid-stream is revocation, so the
         per-window check is a set lookup, not a re-attestation.
         """
-        live = [w for w in range(max(1, st.workers))
-                if not self.directory.policy.is_revoked(
-                    self.worker_id(st.name, w))]
+        live = []
+        for w in range(max(1, st.workers)):
+            wid = self.worker_id(st.name, w)
+            if self.directory.policy.is_revoked(wid):
+                if wid not in self._evicted_logged:
+                    self._evicted_logged.add(wid)
+                    self.directory.audit.record("eviction", worker=wid,
+                                                stage=st.name)
+                continue
+            live.append(w)
         if not live:
             # deliberately NOT RevokedWorkerError: a stage name is not a
             # worker id, and the ft supervisor revokes e.worker_id
@@ -257,8 +294,12 @@ class Pipeline:
         mode = self.secure.mode
         st_mode = mode if st.sgx else ("plain" if mode == "plain"
                                        else "encrypted")
-        return [EnclaveExecutor(st_mode, self.keys[i], self.keys[i + 1])
+        pool = [EnclaveExecutor(st_mode, self.keys[i], self.keys[i + 1])
                 for _ in range(max(1, st.workers))]
+        for w, ex in enumerate(pool):
+            ex.tracer = self.tracer
+            ex.track = f"{st.name}/w{w}"
+        return pool
 
     def _stage_stream(self, upstream: Iterator[SealedWindow], st: Stage,
                       pool: List[EnclaveExecutor],
@@ -284,6 +325,11 @@ class Pipeline:
         m = self.metrics[st.name]
         if len(m.per_worker) < len(pool):
             m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
+        tr = self.tracer
+        audit = self.directory.audit
+        # instruments resolved ONCE per stage stream, not per window
+        lat = _METRICS.histogram(f"pipeline.stage.{st.name}.window_seconds")
+        depth = _METRICS.gauge(f"pipeline.stage.{st.name}.queue_rows")
         phase = 0                    # rolling global row index for rr
         while True:
             live = self._live_workers(st)
@@ -298,40 +344,46 @@ class Pipeline:
                 got += len(win)
             if not parts:
                 return
+            depth.set(got)
             # pulling the window may itself have revoked workers upstream
             live = self._live_workers(st)
             L = len(live)
             t0 = time.perf_counter()
             dispatches = []          # (part idx, worker, row idxs, out, ok)
-            for pi, win in enumerate(parts):
-                B = len(win)
-                assign = [(phase + j) % L for j in range(B)]
-                phase += B
-                for k in range(L):
-                    idxs = [j for j in range(B) if assign[j] == k]
-                    if not idxs:
-                        continue
-                    sub = win if len(idxs) == B else win.select(idxs)
-                    w = live[k]
-                    if st.fn is not None:
-                        out, ok = pool[w].run_window(st.fn, sub)
-                    else:
-                        out, ok = pool[w].run_static_window(st.op, st.const,
-                                                            sub)
-                    dispatches.append((pi, w, idxs, out, ok))
+            with tr.span("stage.dispatch", cat="dispatch", track=st.name,
+                         rows=got, workers=L):
+                for pi, win in enumerate(parts):
+                    B = len(win)
+                    assign = [(phase + j) % L for j in range(B)]
+                    phase += B
+                    for k in range(L):
+                        idxs = [j for j in range(B) if assign[j] == k]
+                        if not idxs:
+                            continue
+                        sub = win if len(idxs) == B else win.select(idxs)
+                        w = live[k]
+                        if st.fn is not None:
+                            out, ok = pool[w].run_window(st.fn, sub)
+                        else:
+                            out, ok = pool[w].run_static_window(
+                                st.op, st.const, sub)
+                        dispatches.append((pi, w, idxs, out, ok))
             verdicts = _sync_window(
                 [d[3].words for d in dispatches],
-                [(d[4], len(d[3])) for d in dispatches])
+                [(d[4], len(d[3])) for d in dispatches],
+                tracer=tr, track=st.name)
             # honest window timing: t0 -> after block_until_ready, so
             # throughput_mbps reflects execution, not async enqueue
-            m.seconds += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            m.seconds += dt
+            lat.observe(dt)
             off = 0
             marks: List[np.ndarray] = []
             for pi, w, idxs, out, _ in dispatches:
                 v = verdicts[off: off + len(idxs)]
                 off += len(idxs)
                 marks.append(v)
-                for alive in v:
+                for jj, alive in enumerate(v):
                     if alive:
                         m.chunks += 1
                         m.per_worker[w] += 1
@@ -339,7 +391,14 @@ class Pipeline:
                     else:
                         m.mac_failures += 1
                         pool[w].errors += 1
-            yield from self._merge_outputs(parts, dispatches, marks)
+                        audit.record("mac_failure", stage=st.name,
+                                     worker=self.worker_id(st.name, w),
+                                     row=out.counters[jj],
+                                     epoch=out.epochs[jj])
+            with tr.span("stage.merge", cat="pipeline", track=st.name,
+                         windows=len(parts)):
+                merged = list(self._merge_outputs(parts, dispatches, marks))
+            yield from merged
 
     @staticmethod
     def _merge_outputs(parts, dispatches, marks):
@@ -404,23 +463,29 @@ class Pipeline:
         """
         it = iter(source)
         n_plain = 0
+        tr = self.tracer
+        buffered = _METRICS.gauge("pipeline.ingress.buffered_rows")
         prev: Optional[List[SealedWindow]] = None
         while True:
             xs = list(itertools.islice(it, window))
             if not xs:
                 break
-            if mode == "plain":
-                cur = [plain_window(range(n_plain + j,
-                                          n_plain + j + len(sub)), sub)
-                       for j, sub in _shape_runs(xs)]
-                n_plain += len(xs)
-            else:
-                cur = self._seal_ingress_window(xs, rekey_every_n)
+            with tr.span("ingress.seal", cat="dispatch", track="ingress",
+                         rows=len(xs)):
+                if mode == "plain":
+                    cur = [plain_window(range(n_plain + j,
+                                              n_plain + j + len(sub)), sub)
+                           for j, sub in _shape_runs(xs)]
+                    n_plain += len(xs)
+                else:
+                    cur = self._seal_ingress_window(xs, rekey_every_n)
+            buffered.set(len(xs))
             if prev is not None:
                 yield from prev
             prev = cur
         if prev is not None:
             yield from prev
+        buffered.set(0)
 
     def _seal_ingress_window(self, xs: List[jax.Array],
                              rekey: Optional[int]) -> List[SealedWindow]:
@@ -432,7 +497,9 @@ class Pipeline:
         while i < len(xs):
             sess = self.directory.session(h0.edge)
             if rekey and sess.chunks >= rekey:
-                self.directory.advance_epoch()
+                self.tracer.instant("rekey", cat="security",
+                                    track="ingress",
+                                    epoch=self.directory.advance_epoch())
                 sess = self.directory.session(h0.edge)
             room = len(xs) - i if not rekey else max(1, rekey - sess.chunks)
             group = xs[i:i + room]
@@ -484,7 +551,8 @@ class Pipeline:
     def run(self, source: Iterable[jax.Array],
             on_result: Optional[Callable] = None,
             rekey_every_n: Optional[int] = None,
-            window_chunks: Optional[int] = None) -> Any:
+            window_chunks: Optional[int] = None,
+            tracer=None) -> Any:
         """Stream source tensors through all stages; returns the terminal
         reduce value (if the last stage reduces) or the last chunk.
 
@@ -498,7 +566,29 @@ class Pipeline:
 
         ``window_chunks`` overrides the pipeline's window factor for this
         run; 1 is the per-chunk oracle engine.
+
+        ``tracer``: a :class:`repro.obs.trace.Tracer` for this run only —
+        per-window spans (ingress seal, per-worker open->op->seal,
+        verdict syncs, merges, reduce folds) land on it, exportable as
+        Chrome-trace JSON.  Defaults to the pipeline's own tracer
+        (:data:`NULL_TRACER` unless one was passed at construction), so
+        tracing is strictly opt-in and no-op-cheap when off.
         """
+        prev_tracer = self.tracer
+        if tracer is not None:
+            self.tracer = tracer
+        try:
+            with self.tracer.span("pipeline.run", mode=self.secure.mode,
+                                  stages=len(self.stages)):
+                return self._run_impl(source, on_result, rekey_every_n,
+                                      window_chunks)
+        finally:
+            self.tracer = prev_tracer
+
+    def _run_impl(self, source: Iterable[jax.Array],
+                  on_result: Optional[Callable],
+                  rekey_every_n: Optional[int],
+                  window_chunks: Optional[int]) -> Any:
         mode = self.secure.mode
         wc = self.window_chunks if window_chunks is None \
             else max(1, int(window_chunks))
@@ -530,35 +620,54 @@ class Pipeline:
             # the reduce swallows the stream.
             st = self.stages[reduce_idx]
             m = self.metrics[st.name]
+            audit = self.directory.audit
+            egress_lat = _METRICS.histogram("pipeline.egress.window_seconds")
             reduce_state: Any = None
             reduce_started = False
             for groups, verdicts, dt in self._egress_windows(
                     stream, mode, self.keys[reduce_idx], egress_rows):
+                egress_lat.observe(dt)
                 t0 = time.perf_counter()
-                off = 0
-                for win, vals in groups:
-                    for j in range(len(win)):
-                        if not verdicts[off + j]:
-                            m.mac_failures += 1
-                            continue
-                        if not reduce_started:
-                            reduce_state = st.reduce_init
-                            reduce_started = True
-                        reduce_state = st.reduce_fn(reduce_state, vals[j])
-                        m.chunks += 1
-                        m.bytes += int(win.n_words) * 4
-                    off += len(win)
+                with self.tracer.span("reduce.fold", cat="pipeline",
+                                      track="sink", rows=len(verdicts)):
+                    off = 0
+                    for win, vals in groups:
+                        for j in range(len(win)):
+                            if not verdicts[off + j]:
+                                m.mac_failures += 1
+                                audit.record(
+                                    "mac_failure", stage=st.name,
+                                    worker="io/sink",
+                                    row=win.counters[j],
+                                    epoch=win.epochs[j])
+                                continue
+                            if not reduce_started:
+                                reduce_state = st.reduce_init
+                                reduce_started = True
+                            reduce_state = st.reduce_fn(reduce_state,
+                                                        vals[j])
+                            m.chunks += 1
+                            m.bytes += int(win.n_words) * 4
+                        off += len(win)
                 m.seconds += dt + (time.perf_counter() - t0)
             return reduce_state if reduce_started else None
 
         final = None
-        for groups, verdicts, _ in self._egress_windows(
+        audit = self.directory.audit
+        egress_lat = _METRICS.histogram("pipeline.egress.window_seconds")
+        for groups, verdicts, dt in self._egress_windows(
                 stream, mode, self.keys[len(self.stages)], egress_rows):
+            egress_lat.observe(dt)
             off = 0
             for win, vals in groups:
                 for j in range(len(win)):
                     final = vals[j]
-                    if on_result is not None and verdicts[off + j]:
+                    if not verdicts[off + j]:
+                        audit.record("mac_failure", stage="egress",
+                                     worker="io/sink",
+                                     row=win.counters[j],
+                                     epoch=win.epochs[j])
+                    elif on_result is not None:
                         on_result(vals[j])
                 off += len(win)
         return final
@@ -585,11 +694,14 @@ class Pipeline:
         t0 = time.perf_counter()
         groups = []
         specs = []
-        for win in parts:
-            vals, ok = egress_window(mode, key, win)
-            groups.append((win, vals))
-            specs.append((ok, len(win)))
-        verdicts = _sync_window([v for _, v in groups], specs)
+        with self.tracer.span("egress.open", cat="dispatch", track="sink",
+                              rows=sum(len(w) for w in parts)):
+            for win in parts:
+                vals, ok = egress_window(mode, key, win)
+                groups.append((win, vals))
+                specs.append((ok, len(win)))
+        verdicts = _sync_window([v for _, v in groups], specs,
+                                tracer=self.tracer, track="sink")
         return groups, verdicts, time.perf_counter() - t0
 
     # ------------------------------------- per-chunk oracle (window_chunks=1)
@@ -608,7 +720,9 @@ class Pipeline:
             h0 = self.keys[0]
             if rekey_every_n and \
                     self.directory.session(h0.edge).chunks >= rekey_every_n:
-                self.directory.advance_epoch()
+                self.tracer.instant("rekey", cat="security",
+                                    track="ingress",
+                                    epoch=self.directory.advance_epoch())
             yield ingress(mode, h0, h0.next_counter(), x)
 
     def _stage_stream_chunked(self, upstream: Iterator[SealedChunk],
@@ -617,10 +731,12 @@ class Pipeline:
         """The per-chunk oracle: scalar open->op->seal per chunk with a
         blocking ``bool(ok)`` host sync per chunk — round-robin dispatch
         over the pool, fair-queue merge of the worker sub-streams."""
-        global _HOST_SYNCS
         m = self.metrics[st.name]
         if len(m.per_worker) < len(pool):
             m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
+        tr = self.tracer
+        audit = self.directory.audit
+        lat = _METRICS.histogram(f"pipeline.stage.{st.name}.window_seconds")
         while True:
             live = self._live_workers(st)
             window = list(itertools.islice(upstream, len(live)))
@@ -632,15 +748,23 @@ class Pipeline:
                 outs: List[SealedChunk] = []
                 for chunk in queue:
                     t0 = time.perf_counter()
-                    if st.fn is not None:
-                        out = pool[w].run(st.fn, chunk)
-                    else:
-                        out = pool[w].run_static(st.op, st.const, chunk)
+                    with tr.span("stage.chunk", cat="dispatch",
+                                 track=f"{st.name}/w{w}",
+                                 row=chunk.counter):
+                        if st.fn is not None:
+                            out = pool[w].run(st.fn, chunk)
+                        else:
+                            out = pool[w].run_static(st.op, st.const, chunk)
                     if pool[w].mode != "plain":
-                        _HOST_SYNCS += 1       # the scalar bool(ok) sync
-                    m.seconds += time.perf_counter() - t0
+                        _HOST_SYNCS.inc()      # the scalar bool(ok) sync
+                    dt = time.perf_counter() - t0
+                    m.seconds += dt
+                    lat.observe(dt)            # the oracle's window IS a chunk
                     if out is None:
                         m.mac_failures += 1
+                        audit.record("mac_failure", stage=st.name,
+                                     worker=self.worker_id(st.name, w),
+                                     row=chunk.counter, epoch=chunk.epoch)
                         continue
                     m.chunks += 1
                     m.per_worker[w] += 1
@@ -654,8 +778,8 @@ class Pipeline:
                      rekey_every_n: Optional[int]) -> Any:
         """The original streaming engine, chunk by chunk (the
         ``window_chunks=1`` degenerate case)."""
-        global _HOST_SYNCS
         mode = self.secure.mode
+        audit = self.directory.audit
         stream: Iterator[SealedChunk] = self._ingress_stream_chunked(
             source, mode, rekey_every_n)
         reduce_idx = next((i for i, s in enumerate(self.stages)
@@ -675,9 +799,12 @@ class Pipeline:
                 t0 = time.perf_counter()
                 val, ok = egress(mode, self.keys[reduce_idx], chunk)
                 if mode != "plain":
-                    _HOST_SYNCS += 1
+                    _HOST_SYNCS.inc()
                 if not bool(ok):
                     m.mac_failures += 1
+                    audit.record("mac_failure", stage=st.name,
+                                 worker="io/sink", row=chunk.counter,
+                                 epoch=chunk.epoch)
                     continue
                 if not reduce_started:
                     reduce_state = st.reduce_init
@@ -692,9 +819,13 @@ class Pipeline:
         for chunk in stream:
             result, ok = egress(mode, self.keys[len(self.stages)], chunk)
             if mode != "plain":
-                _HOST_SYNCS += 1
+                _HOST_SYNCS.inc()
             final = result
-            if on_result is not None and bool(ok):
+            if not bool(ok):
+                audit.record("mac_failure", stage="egress",
+                             worker="io/sink", row=chunk.counter,
+                             epoch=chunk.epoch)
+            elif on_result is not None:
                 on_result(result)
         return final
 
@@ -718,7 +849,10 @@ class Pipeline:
         p = Pipeline(stages, self.secure, seed=self.seed,
                      directory=self.directory,
                      window_chunks=self.window_chunks,
-                     fusion=self.fusion)
+                     fusion=self.fusion,
+                     tracer=None if self.tracer is NULL_TRACER
+                     else self.tracer)
+        p._evicted_logged = self._evicted_logged
         for sname, m in self.metrics.items():
             pw = list(m.per_worker)
             if sname == name and len(pw) < workers:
@@ -736,8 +870,12 @@ class Pipeline:
         out: Dict[str, Dict[str, Any]] = {
             name: {"chunks": m.chunks, "bytes": m.bytes,
                    "seconds": round(m.seconds, 4),
-                   "throughput_mbps": round(m.throughput_mbps, 2),
+                   # None = nothing measured yet (distinct from a true 0.0)
+                   "throughput_mbps": None if m.throughput_mbps is None
+                   else round(m.throughput_mbps, 2),
                    "mac_failures": m.mac_failures,
+                   "mac_failure_rate": None if m.mac_failure_rate is None
+                   else round(m.mac_failure_rate, 4),
                    "per_worker": list(m.per_worker),
                    **({"fused_from": list(fused_from[name])}
                       if name in fused_from else {})}
@@ -745,4 +883,5 @@ class Pipeline:
         }
         if self.fusion.get("decisions"):
             out["fusion"] = {"decisions": list(self.fusion["decisions"])}
+        out["audit"] = self.directory.audit.summary()
         return out

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.crypto import chacha20, cwmac
+from repro.obs.metrics import REGISTRY as _METRICS
 
 U32 = jnp.uint32
 P31 = np.uint32(0x7FFFFFFF)
@@ -83,7 +84,10 @@ _DEFAULT_BACKEND = "pallas"
 
 _COMPILE_CACHE: "OrderedDict[Tuple, Any]" = OrderedDict()
 _COMPILE_CACHE_MAX = 64
-_FASTPATH_STATS = {"compiles": 0, "hits": 0}
+# registered instruments (repro.obs.metrics) — fastpath_stats()/reset_*
+# below are the legacy shims over these
+_FP_COMPILES = _METRICS.counter("aead.fastpath.compiles")
+_FP_HITS = _METRICS.counter("aead.fastpath.hits")
 
 
 def _resolve_backend(backend: Optional[str]) -> str:
@@ -170,7 +174,7 @@ def _cached_program(op: str, B: int, n_words: int, backend: str,
     ck = (op, B, n_words, backend, per_item_key)
     fn = _COMPILE_CACHE.get(ck)
     if fn is None:
-        _FASTPATH_STATS["compiles"] += 1
+        _FP_COMPILES.inc()
         impl = {"seal": _seal_words, "open": _open_words,
                 "mac2": _mac2_words}.get(op)
         if impl is None:                       # mackeys takes no backend kw
@@ -181,7 +185,7 @@ def _cached_program(op: str, B: int, n_words: int, backend: str,
         while len(_COMPILE_CACHE) > _COMPILE_CACHE_MAX:
             _COMPILE_CACHE.popitem(last=False)
     else:
-        _FASTPATH_STATS["hits"] += 1
+        _FP_HITS.inc()
         _COMPILE_CACHE.move_to_end(ck)
     return fn
 
@@ -268,22 +272,30 @@ def mac2_many(words: jax.Array, mac_keys: jax.Array, *,
 
 def fastpath_stats() -> Dict[str, int]:
     """Compile-cache counters: ``compiles`` (cache misses -> new programs),
-    ``hits`` (shape already compiled), ``cached`` (resident programs)."""
-    return dict(_FASTPATH_STATS, cached=len(_COMPILE_CACHE))
+    ``hits`` (shape already compiled), ``cached`` (resident programs).
+
+    Shim over the registered counters ``aead.fastpath.compiles`` /
+    ``aead.fastpath.hits`` in :data:`repro.obs.metrics.REGISTRY`.
+    """
+    return {"compiles": int(_FP_COMPILES.value),
+            "hits": int(_FP_HITS.value),
+            "cached": len(_COMPILE_CACHE)}
 
 
 def reset_fastpath_cache() -> None:
     """Drop all cached programs and zero the counters (tests/benchmarks
     that need a genuinely cold cache — recompiles cost ~2 s/shape)."""
     _COMPILE_CACHE.clear()
-    _FASTPATH_STATS.update(compiles=0, hits=0)
+    _FP_COMPILES.reset()
+    _FP_HITS.reset()
 
 
 def reset_fastpath_stats() -> None:
     """Zero the hit/compile counters but KEEP the compiled programs —
     enough for order-independent cache-hit assertions without re-paying
     warm compiles (the per-module test fixture)."""
-    _FASTPATH_STATS.update(compiles=0, hits=0)
+    _FP_COMPILES.reset()
+    _FP_HITS.reset()
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,8 @@ from jax.sharding import PartitionSpec as P
 from repro.crypto import aead
 from repro.crypto.keys import StageKey
 from repro.dist.compat import shard_map
+from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.trace import NULL_TRACER
 
 U32 = jnp.uint32
 
@@ -86,19 +88,20 @@ def _check_mailbox(x: jax.Array, W: int) -> None:
             f"got {x.shape}")
 
 
-_EXCHANGE_CALLS = 0
+_EXCHANGE_CALLS = _METRICS.counter("dist.exchange_calls")
 
 
 def exchange_call_count() -> int:
     """Total :func:`exchange` collectives issued (tests/benchmarks assert
-    the sealed path costs exactly ONE collective per round)."""
-    return _EXCHANGE_CALLS
+    the sealed path costs exactly ONE collective per round).  Shim over
+    the registered counter ``dist.exchange_calls``."""
+    return int(_EXCHANGE_CALLS.value)
 
 
-def exchange(x: jax.Array, mesh, axis: str = "model") -> jax.Array:
+def exchange(x: jax.Array, mesh, axis: str = "model", *,
+             tracer=NULL_TRACER) -> jax.Array:
     """Plain all_to_all of mailbox blocks: ``y[j, i] = x[i, j]``."""
-    global _EXCHANGE_CALLS
-    _EXCHANGE_CALLS += 1
+    _EXCHANGE_CALLS.inc()
     W = int(mesh.shape[axis])
     _check_mailbox(x, W)
     spec = _mailbox_spec(x.ndim, axis)
@@ -106,8 +109,10 @@ def exchange(x: jax.Array, mesh, axis: str = "model") -> jax.Array:
     def block(xb):  # local (1, W, ...)
         return jax.lax.all_to_all(xb[0], axis, 0, 0, tiled=True)[None]
 
-    return shard_map(block, mesh=mesh, in_specs=spec, out_specs=spec,
-                     check_vma=False)(x)
+    with tracer.span("dist.exchange", cat="dispatch", track="dist",
+                     W=W, shape=str(tuple(x.shape))):
+        return shard_map(block, mesh=mesh, in_specs=spec, out_specs=spec,
+                         check_vma=False)(x)
 
 
 def _resolve_session(key, step: Optional[int],
@@ -142,7 +147,7 @@ def _resolve_session(key, step: Optional[int],
 
 
 def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
-                    key, step: Optional[int] = None
+                    key, step: Optional[int] = None, tracer=NULL_TRACER
                     ) -> Tuple[jax.Array, jax.Array]:
     """AEAD-sealed all_to_all: ciphertext + tags cross the wire.
 
@@ -173,23 +178,27 @@ def secure_exchange(x: jax.Array, mesh, axis: str = "model", *,
     n_words = math.prod(blk_shape) if blk_shape else 1
     kw = jnp.asarray(key.key)
 
-    flat = x.reshape(W * W, n_words)
-    words = flat if x.dtype == jnp.uint32 else \
-        jax.lax.bitcast_convert_type(flat, jnp.uint32)
-    nonces = _route_nonces_base(W, base)                  # (W*W, 3) [src, dst]
-    ct, tags = aead.seal_many(kw, nonces, words)          # one program
+    with tracer.span("dist.secure_exchange", cat="dispatch", track="dist",
+                     W=W, n_words=n_words, base_counter=int(base)):
+        flat = x.reshape(W * W, n_words)
+        words = flat if x.dtype == jnp.uint32 else \
+            jax.lax.bitcast_convert_type(flat, jnp.uint32)
+        nonces = _route_nonces_base(W, base)              # (W*W, 3) [src, dst]
+        ct, tags = aead.seal_many(kw, nonces, words)      # one program
 
-    # pack ciphertext + tags into one payload: ONE collective per round
-    payload = jnp.concatenate([ct, tags], axis=-1).reshape(W, W, n_words + 2)
-    payload_r = exchange(payload, mesh, axis).reshape(W * W, n_words + 2)
+        # pack ciphertext + tags into one payload: ONE collective per round
+        payload = jnp.concatenate([ct, tags],
+                                  axis=-1).reshape(W, W, n_words + 2)
+        payload_r = exchange(payload, mesh, axis,
+                             tracer=tracer).reshape(W * W, n_words + 2)
 
-    # inbox[dst, src] was sealed with the (src, dst) counter
-    nonces_in = nonces.reshape(W, W, 3).swapaxes(0, 1).reshape(W * W, 3)
-    pt, ok = aead.open_many(kw, nonces_in, payload_r[:, :n_words],
-                            payload_r[:, n_words:])
-    out = pt if x.dtype == jnp.uint32 else \
-        jax.lax.bitcast_convert_type(pt, x.dtype)
-    return out.reshape(W, W, *blk_shape), ok.reshape(W, W)
+        # inbox[dst, src] was sealed with the (src, dst) counter
+        nonces_in = nonces.reshape(W, W, 3).swapaxes(0, 1).reshape(W * W, 3)
+        pt, ok = aead.open_many(kw, nonces_in, payload_r[:, :n_words],
+                                payload_r[:, n_words:])
+        out = pt if x.dtype == jnp.uint32 else \
+            jax.lax.bitcast_convert_type(pt, x.dtype)
+        return out.reshape(W, W, *blk_shape), ok.reshape(W, W)
 
 
 def _consistent_hash(k: jax.Array) -> jax.Array:

@@ -153,6 +153,23 @@ class StreamBuilder:
         applied where it is bit-exact, see :mod:`repro.dsl.compile`)."""
         return self._with_settings(fuse=bool(enabled))
 
+    def trace(self, tracer=None) -> "StreamBuilder":
+        """Attach a :class:`repro.obs.trace.Tracer` to the compiled
+        pipeline (a fresh one when ``tracer`` is None).  Per-window spans
+        — ingress seals, per-worker open->op->seal, verdict syncs, merges,
+        reduce folds — land on it; export with
+        ``builder.tracer.export_chrome("trace.json")`` after a run.
+        Tracing stays strictly off (zero-cost no-ops) unless this is
+        called or a tracer is passed to ``Pipeline.run``."""
+        from repro.obs.trace import Tracer
+        return self._with_settings(
+            tracer=tracer if tracer is not None else Tracer())
+
+    @property
+    def tracer(self):
+        """The tracer attached via :meth:`trace` (None when untraced)."""
+        return self._settings.get("tracer")
+
     # ------------------------------------------------------------ lowering
 
     def build(self, mode: Optional[str] = None, *,
@@ -173,7 +190,8 @@ class StreamBuilder:
             directory=s.get("directory"),
             window_chunks=s.get("window_chunks", 8),
             fuse=s.get("fuse", True),
-            rekey_every_n=rekey_every_n)
+            rekey_every_n=rekey_every_n,
+            tracer=s.get("tracer"))
         return self.pipeline
 
     def run(self, source: Optional[Iterable] = None, *,

@@ -1,0 +1,21 @@
+"""repro.obs — unified telemetry: span tracing, metrics, security audit.
+
+Three planes, one subsystem (docs/observability.md):
+
+* :mod:`repro.obs.trace`   — per-window span tracing (:class:`Tracer`,
+  off-by-default via :data:`NULL_TRACER`), Chrome-trace JSON export;
+* :mod:`repro.obs.metrics` — the process-wide :data:`REGISTRY` of named
+  counters/gauges/histograms (absorbs the legacy global counters);
+* :mod:`repro.obs.audit`   — the append-only security event stream owned
+  by each :class:`repro.attest.KeyDirectory`.
+"""
+from repro.obs.audit import AuditEvent, AuditLog
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               REGISTRY)
+from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
+
+__all__ = [
+    "AuditEvent", "AuditLog",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "NULL_TRACER", "NullTracer", "Span", "Tracer",
+]
