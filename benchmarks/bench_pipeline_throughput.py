@@ -85,7 +85,7 @@ def _build_dsl(wc: int, seed: int = 0) -> Pipeline:
 
 def _run_windowed(wc: int, n_chunks: int, chunk_words: int, *,
                   rekey=None, revoke_at=None, seed: int = 0,
-                  build=_build_manual, tracer=None):
+                  build=_build_manual, tracer=None, monitor=None):
     """One 8-stage encrypted run at window factor ``wc``; returns
     (seconds, terminal reduce array)."""
     p = build(wc, seed)
@@ -100,7 +100,8 @@ def _run_windowed(wc: int, n_chunks: int, chunk_words: int, *,
             yield c
 
     t0 = time.perf_counter()
-    out = p.run(source(), rekey_every_n=rekey, tracer=tracer)
+    out = p.run(source(), rekey_every_n=rekey, tracer=tracer,
+                monitor=monitor)
     jax.block_until_ready(out)
     return time.perf_counter() - t0, np.asarray(out)
 
@@ -215,17 +216,64 @@ def run(quick: bool = False):
                  f"enabled, 0% disabled) spans={len(tracer)} "
                  f"trace.json exported"))
 
+    # ---- live health monitor budget: <= 3% enabled, parity disabled ---
+    # Same interleaved-pair discipline as pipeline.traced: a monitored
+    # run folds one record_window per stage round into the sliding
+    # stats; the unmonitored engine holds NULL_MONITOR (one attribute
+    # check per window).  The detail string carries the per-run device
+    # dispatch accounting — total compiled-program launches (counted in
+    # the eager wrappers, never in traced code) and launches-per-window
+    # at a representative single-worker encrypted hop, which must stay
+    # at 2 (open_many + seal_many).
+    from repro.obs.metrics import dispatch_count, reset_dispatch_count
+    from repro.obs.monitor import PipelineMonitor
+    monitor = None
+    disp_run = 0
+
+    def _mpair():
+        nonlocal monitor, disp_run
+        off, _ = _run_windowed(8, n_chunks, chunk_words)
+        m = PipelineMonitor()
+        reset_dispatch_count()
+        on, _ = _run_windowed(8, n_chunks, chunk_words, monitor=m)
+        disp_run = dispatch_count()
+        monitor = m
+        return off, on
+
+    dt_moff = dt_mon = float("inf")
+    for round_ in range(3):                    # extra rounds only if over
+        for _ in range(reps):
+            off, on = _mpair()
+            dt_moff = min(dt_moff, off)
+            dt_mon = min(dt_mon, on)
+        if dt_mon / dt_moff - 1.0 <= 0.03:
+            break
+    m_overhead = dt_mon / dt_moff - 1.0
+    assert m_overhead <= 0.03, \
+        f"monitor overhead {m_overhead * 100:.1f}% exceeds the 3% budget"
+    snap = monitor.snapshot()
+    dpw = snap["stages"]["s1"]["dispatches_per_window"]
+    rows.append(("pipeline.monitored", dt_mon * 1e6,
+                 f"overhead={max(0.0, m_overhead) * 100:.1f}% (budget <=3% "
+                 f"enabled, 0% disabled) dispatches={disp_run} "
+                 f"dpw_s1={dpw:.1f} stages={len(snap['stages'])}"))
+
     # bit-identical terminal reduce under mid-stream rekeying + a live
     # revocation, batched engine vs the per-chunk oracle on the SAME
     # source (B>=8 windows straddle the epoch flips; a worker of s2 is
-    # evicted mid-stream on both engines)
+    # evicted mid-stream on both engines), and monitored vs unmonitored
+    # on the batched engine (monitoring must not change a bit)
     _, out_rot_c = _run_windowed(1, n_oracle, chunk_words, rekey=3,
                                  revoke_at=n_oracle // 2)
     _, out_rot_b = _run_windowed(8, n_oracle, chunk_words, rekey=3,
                                  revoke_at=n_oracle // 2)
+    _, out_rot_m = _run_windowed(8, n_oracle, chunk_words, rekey=3,
+                                 revoke_at=n_oracle // 2,
+                                 monitor=PipelineMonitor())
     parity = bool(np.array_equal(out_rot_b, out_rot_c)) and \
-        bool(np.array_equal(out_rot_b, out_chunked))
+        bool(np.array_equal(out_rot_b, out_chunked)) and \
+        bool(np.array_equal(out_rot_m, out_rot_b))
     rows.append(("pipeline.window.parity", 0.0,
-                 f"bit_identical={parity} rekey_every_n=3+revocation "
-                 f"speedup={best:.1f}x"))
+                 f"bit_identical={parity} rekey_every_n=3+revocation"
+                 f"+monitor speedup={best:.1f}x"))
     return rows

@@ -49,6 +49,17 @@ def main() -> None:
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record per-window spans and write a Chrome-trace "
                          "JSON here (open in chrome://tracing / Perfetto)")
+    ap.add_argument("--serve-metrics", metavar="PORT", type=int,
+                    default=None,
+                    help="attach a live PipelineMonitor and serve "
+                         "/metrics (Prometheus), /health and /snapshot "
+                         "on this port while the job streams (0 = pick "
+                         "an ephemeral port)")
+    ap.add_argument("--serve-hold", metavar="SECONDS", type=float,
+                    default=0.0,
+                    help="with --serve-metrics: keep the endpoint up this "
+                         "long after the run so scrapers can collect the "
+                         "final snapshot (CI uses this)")
     args = ap.parse_args()
 
     if args.spec:
@@ -59,6 +70,14 @@ def main() -> None:
         pipe = build_pipeline(args.mode, args.workers)
     if args.trace:
         pipe = pipe.trace()
+    srv = None
+    if args.serve_metrics is not None:
+        from repro.obs.export import serve_metrics
+        pipe = pipe.monitor()
+        srv = serve_metrics(args.serve_metrics,
+                            monitor=pipe.health_monitor)
+        print(f"live health: {srv.url}/metrics {srv.url}/health "
+              f"{srv.url}/snapshot", flush=True)
     src = (jnp.asarray(c) for c in
            flight_chunks(args.records, args.chunk * args.workers, seed=1))
     t0 = time.perf_counter()
@@ -82,6 +101,16 @@ def main() -> None:
         pipe.tracer.export_chrome(args.trace)
         print(f"wrote {args.trace} ({len(pipe.tracer)} spans) — open in "
               f"chrome://tracing or https://ui.perfetto.dev")
+    if srv is not None:
+        snap = pipe.health_monitor.snapshot()
+        print(f"monitor: {snap['pipeline']['windows_total']} windows, "
+              f"{snap['pipeline']['dispatches']} device dispatches, "
+              f"stages={sorted(snap['stages'])}")
+        if args.serve_hold:
+            print(f"holding metrics endpoint {args.serve_hold:.0f}s for "
+                  f"scrapers...", flush=True)
+            time.sleep(args.serve_hold)
+        srv.stop()
 
 
 if __name__ == "__main__":

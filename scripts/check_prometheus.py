@@ -1,0 +1,118 @@
+"""Prometheus text-exposition well-formedness gate (CI scrape check).
+
+Validates a scraped ``/metrics`` body against the text exposition format
+(version 0.0.4), stdlib-only:
+
+* every non-comment line is ``name[{labels}] value`` with a legal metric
+  name, legal label names, correctly quoted/escaped label values, and a
+  value that parses as a float (``NaN``/``Inf`` allowed);
+* every sample's base name was declared by a preceding ``# TYPE`` line
+  (``_count``/``_sum`` suffixes resolve to their summary's base name)
+  and no metric name is ``# TYPE``-declared twice;
+* with ``--require-label k=v``, at least one sample carries that label
+  pair (CI asserts presence of the per-stage series this way).
+
+Run:  python scripts/check_prometheus.py metrics.prom \
+          [--require-label stage=ingress] [--min-samples N]
+
+Exits non-zero with a per-finding report on any violation.  Also
+importable: ``validate(text) -> list[str]`` returns the findings.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from typing import List, Optional, Tuple
+
+_METRIC = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+_LABEL = r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\.)*"'
+_VALUE = r"(?:[-+]?(?:\d+\.?\d*|\.\d+)(?:[eE][-+]?\d+)?|NaN|[-+]?Inf)"
+_SAMPLE = re.compile(
+    rf"^(?P<name>{_METRIC})"
+    rf"(?:\{{(?P<labels>{_LABEL}(?:,{_LABEL})*)?\}})?"
+    rf" (?P<value>{_VALUE})(?: \d+)?$")
+_HELP = re.compile(rf"^# HELP ({_METRIC}) .*$")
+_TYPE = re.compile(
+    rf"^# TYPE ({_METRIC}) (counter|gauge|summary|histogram|untyped)$")
+_LABEL_ONE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\\n]|\\.)*)"')
+
+
+def _base_name(name: str) -> str:
+    """Resolve summary/histogram child samples to their declared base."""
+    for suffix in ("_count", "_sum", "_bucket"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def validate(text: str,
+             require_labels: Tuple[Tuple[str, str], ...] = (),
+             min_samples: int = 1) -> List[str]:
+    """-> list of findings (empty = well-formed)."""
+    problems: List[str] = []
+    typed: set = set()
+    n_samples = 0
+    satisfied = {pair: False for pair in require_labels}
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            if _HELP.match(line):
+                continue
+            m = _TYPE.match(line)
+            if m:
+                if m.group(1) in typed:
+                    problems.append(
+                        f"line {ln}: duplicate # TYPE for {m.group(1)!r}")
+                typed.add(m.group(1))
+                continue
+            problems.append(f"line {ln}: malformed comment: {line!r}")
+            continue
+        m = _SAMPLE.match(line)
+        if m is None:
+            problems.append(f"line {ln}: malformed sample: {line!r}")
+            continue
+        n_samples += 1
+        name = m.group("name")
+        if _base_name(name) not in typed and name not in typed:
+            problems.append(
+                f"line {ln}: sample {name!r} has no preceding # TYPE")
+        for lname, lval in _LABEL_ONE.findall(m.group("labels") or ""):
+            for pair in require_labels:
+                if (lname, lval) == pair:
+                    satisfied[pair] = True
+    if n_samples < min_samples:
+        problems.append(
+            f"only {n_samples} samples, expected >= {min_samples}")
+    for (k, v), ok in satisfied.items():
+        if not ok:
+            problems.append(f'no sample carries the label {k}="{v}"')
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="scraped /metrics body to validate")
+    ap.add_argument("--require-label", action="append", default=[],
+                    metavar="K=V", help="require a sample with label K=V")
+    ap.add_argument("--min-samples", type=int, default=1)
+    args = ap.parse_args(argv)
+    pairs = []
+    for spec in args.require_label:
+        k, _, v = spec.partition("=")
+        pairs.append((k, v))
+    with open(args.path) as f:
+        text = f.read()
+    problems = validate(text, tuple(pairs), args.min_samples)
+    for p in problems:
+        print(f"check_prometheus: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print(f"check_prometheus: OK ({args.path}: "
+          f"{len(text.splitlines())} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

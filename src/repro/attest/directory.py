@@ -21,7 +21,9 @@ its :class:`repro.crypto.keys.StageKey` from a directory edge, never from
   (:class:`repro.obs.audit.AuditLog`): rekeys, revocations, quote
   rejections, and nonce-space exhaustion are recorded in stream order as
   they happen — the engine appends its data-plane events (MAC failures,
-  evictions) to the same log, so one ordered stream covers the run.
+  evictions) and any attached :class:`repro.obs.monitor.Watchdog`
+  appends its health verdicts (``slo_breach``/``stall``) to the same
+  log, so one ordered stream covers the run end to end.
 """
 from __future__ import annotations
 

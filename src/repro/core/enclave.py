@@ -40,7 +40,15 @@ from repro.crypto import aead, chacha20, cwmac
 from repro.crypto.keys import StageKey, current_epoch as _cur_epoch, \
     resolve_key as _key_at
 from repro.kernels.enclave_map import ops as enclave_ops
+from repro.obs.metrics import REGISTRY as _METRICS
 from repro.obs.trace import NULL_TRACER
+
+# the scalar enclave path launches cwmac.mac2 eagerly (ciphertext MACs
+# happen OUTSIDE the fused kernel); those launches are counted here at
+# the call sites — cwmac.mac2 itself also runs traced inside sealed
+# programs, where a counter would only fire at trace time
+_DISPATCHES = _METRICS.counter("device.dispatches")
+_DISP_CWMAC = _METRICS.counter("device.dispatches.cwmac.mac2")
 
 U32 = jnp.uint32
 
@@ -352,6 +360,8 @@ class EnclaveExecutor:
         # data); the keystream offset for payload is counter0=1.
         r1, s1, r2, s2 = aead.derive_mac_keys(jnp.asarray(kin.key), nonce)
         ct_words = chunk.blocks.reshape(-1)[:chunk.n_words]
+        _DISPATCHES.inc()
+        _DISP_CWMAC.inc()
         ok = jnp.all(cwmac.mac2(ct_words, r1, s1, r2, s2) == chunk.tag)
         if not bool(ok):
             self.errors += 1
@@ -365,6 +375,8 @@ class EnclaveExecutor:
         ro1, so1, ro2, so2 = aead.derive_mac_keys(
             jnp.asarray(kout.key), nonce_out)
         out_words = out_blocks.reshape(-1)[:chunk.n_words]
+        _DISPATCHES.inc()
+        _DISP_CWMAC.inc()
         tag = cwmac.mac2(out_words, ro1, so1, ro2, so2)
         return SealedChunk(blocks=out_blocks, tag=tag, counter=chunk.counter,
                            meta=chunk.meta, n_words=chunk.n_words,

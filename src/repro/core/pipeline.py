@@ -56,7 +56,9 @@ from repro.core import router as R
 from repro.core.enclave import (EnclaveExecutor, SealedChunk, SealedWindow,
                                 egress, egress_window, ingress, plain_window,
                                 seal_tensors_window, uniform_runs)
-from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.metrics import (REGISTRY as _METRICS, dispatch_count,
+                               reset_dispatch_count)  # noqa: F401 (re-export)
+from repro.obs.monitor import NULL_MONITOR
 from repro.obs.trace import NULL_TRACER
 
 
@@ -101,6 +103,17 @@ class StageMetrics:
     # chunks handled per worker of the stage (round-robin fan-out accounting;
     # survives rescaling — scale_stage pads/keeps this list).
     per_worker: List[int] = field(default_factory=list)
+    # window rounds processed and compiled-program launches attributed to
+    # them (the megakernel item's per-hop regression signal: fusing this
+    # stage's open->op->seal chain must DROP dispatches_per_window)
+    windows: int = 0
+    dispatches: int = 0
+
+    @property
+    def dispatches_per_window(self) -> Optional[float]:
+        if self.windows == 0:
+            return None
+        return self.dispatches / self.windows
 
     @property
     def throughput_mbps(self) -> Optional[float]:
@@ -141,6 +154,15 @@ def host_sync_count() -> int:
 def reset_host_sync_count() -> None:
     """Zero the rendezvous counter (test setup)."""
     _HOST_SYNCS.reset()
+
+
+# Compiled-program launches (incremented at every eager launch site:
+# aead fastpath, enclave_map, eager cwmac, dist.exchange).  The engine
+# reads deltas around each window round to attribute launches per stage
+# hop; ``dispatch_count()``/``reset_dispatch_count()`` (re-exported above
+# from repro.obs.metrics) are the process-wide shims next to
+# ``host_sync_count()``.
+_DISPATCHES = _METRICS.counter("device.dispatches")
 
 
 def _shape_runs(xs: List[jax.Array]):
@@ -190,7 +212,8 @@ class Pipeline:
                  directory: Optional[KeyDirectory] = None,
                  window_chunks: int = 8,
                  fusion: Optional[Dict[str, Any]] = None,
-                 tracer=None):
+                 tracer=None,
+                 monitor=None):
         self.stages = list(stages)
         self.secure = secure
         self.seed = seed
@@ -198,6 +221,15 @@ class Pipeline:
         # returns a shared no-op context manager, so the instrumented
         # paths cost an attribute call when tracing is disabled
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # live health monitoring follows the same contract: NULL_MONITOR
+        # is enabled=False, so the per-window record is one attr check
+        self.monitor = monitor if monitor is not None else NULL_MONITOR
+        # dispatch/window accounting for the ingress and egress hops
+        # (stage hops live in StageMetrics)
+        self._ingress_windows_n = 0
+        self._ingress_dispatches = 0
+        self._egress_windows_n = 0
+        self._egress_dispatches = 0
         # worker ids whose eviction has already been audit-logged (the
         # engine records each revoked worker's first skipped dispatch once)
         self._evicted_logged: set = set()
@@ -221,6 +253,7 @@ class Pipeline:
         ] if secure.mode != "plain" else [None] * (len(self.stages) + 1)
         self.metrics: Dict[str, StageMetrics] = {
             s.name: StageMetrics() for s in self.stages}
+        self.monitor.attach(self)
 
     # -------------------------------------------------------- attestation
 
@@ -345,9 +378,11 @@ class Pipeline:
             if not parts:
                 return
             depth.set(got)
+            tr.counter("queue_rows", got, track=st.name)
             # pulling the window may itself have revoked workers upstream
             live = self._live_workers(st)
             L = len(live)
+            d0 = _DISPATCHES.value
             t0 = time.perf_counter()
             dispatches = []          # (part idx, worker, row idxs, out, ok)
             with tr.span("stage.dispatch", cat="dispatch", track=st.name,
@@ -377,6 +412,11 @@ class Pipeline:
             dt = time.perf_counter() - t0
             m.seconds += dt
             lat.observe(dt)
+            m.windows += 1
+            disp = _DISPATCHES.value - d0
+            m.dispatches += disp
+            tr.counter("windows_per_s", (1.0 / dt) if dt > 0 else 0.0,
+                       track=st.name)
             off = 0
             marks: List[np.ndarray] = []
             for pi, w, idxs, out, _ in dispatches:
@@ -395,6 +435,17 @@ class Pipeline:
                                      worker=self.worker_id(st.name, w),
                                      row=out.counters[jj],
                                      epoch=out.epochs[jj])
+            mon = self.monitor
+            if mon.enabled:
+                wrows: Dict[int, int] = {}
+                for _, w, idxs, _, _ in dispatches:
+                    wrows[w] = wrows.get(w, 0) + len(idxs)
+                mon.record_window(
+                    st.name, rows=got, ok_rows=int(verdicts.sum()),
+                    bytes=sum(len(p) * int(p.n_words) * 4 for p in parts),
+                    seconds=dt, queue_rows=got, worker_rows=wrows,
+                    min_epoch=min(min(p.epochs) for p in parts),
+                    dispatches=disp)
             with tr.span("stage.merge", cat="pipeline", track=st.name,
                          windows=len(parts)):
                 merged = list(self._merge_outputs(parts, dispatches, marks))
@@ -464,12 +515,15 @@ class Pipeline:
         it = iter(source)
         n_plain = 0
         tr = self.tracer
+        mon = self.monitor
         buffered = _METRICS.gauge("pipeline.ingress.buffered_rows")
         prev: Optional[List[SealedWindow]] = None
         while True:
             xs = list(itertools.islice(it, window))
             if not xs:
                 break
+            d0 = _DISPATCHES.value
+            t0 = time.perf_counter()
             with tr.span("ingress.seal", cat="dispatch", track="ingress",
                          rows=len(xs)):
                 if mode == "plain":
@@ -480,6 +534,15 @@ class Pipeline:
                 else:
                     cur = self._seal_ingress_window(xs, rekey_every_n)
             buffered.set(len(xs))
+            disp = _DISPATCHES.value - d0
+            self._ingress_windows_n += 1
+            self._ingress_dispatches += disp
+            if mon.enabled:
+                mon.record_window(
+                    "ingress", rows=len(xs),
+                    bytes=sum(len(w) * int(w.n_words) * 4 for w in cur),
+                    seconds=time.perf_counter() - t0, queue_rows=len(xs),
+                    dispatches=disp)
             if prev is not None:
                 yield from prev
             prev = cur
@@ -552,7 +615,7 @@ class Pipeline:
             on_result: Optional[Callable] = None,
             rekey_every_n: Optional[int] = None,
             window_chunks: Optional[int] = None,
-            tracer=None) -> Any:
+            tracer=None, monitor=None) -> Any:
         """Stream source tensors through all stages; returns the terminal
         reduce value (if the last stage reduces) or the last chunk.
 
@@ -573,10 +636,21 @@ class Pipeline:
         Chrome-trace JSON.  Defaults to the pipeline's own tracer
         (:data:`NULL_TRACER` unless one was passed at construction), so
         tracing is strictly opt-in and no-op-cheap when off.
+
+        ``monitor``: a :class:`repro.obs.monitor.PipelineMonitor` for
+        this run only — per-window sliding health (and any attached
+        watchdogs) update live while the run streams.  Defaults to the
+        pipeline's own monitor (:data:`NULL_MONITOR` unless one was
+        passed at construction); a monitored run reads only host-side
+        metadata, so output stays bit-identical to an unmonitored run.
         """
         prev_tracer = self.tracer
+        prev_monitor = self.monitor
         if tracer is not None:
             self.tracer = tracer
+        if monitor is not None:
+            self.monitor = monitor
+            monitor.attach(self)
         try:
             with self.tracer.span("pipeline.run", mode=self.secure.mode,
                                   stages=len(self.stages)):
@@ -584,6 +658,7 @@ class Pipeline:
                                       window_chunks)
         finally:
             self.tracer = prev_tracer
+            self.monitor = prev_monitor
 
     def _run_impl(self, source: Iterable[jax.Array],
                   on_result: Optional[Callable],
@@ -691,6 +766,7 @@ class Pipeline:
             yield self._open_egress(parts, mode, key)
 
     def _open_egress(self, parts: List[SealedWindow], mode: str, key):
+        d0 = _DISPATCHES.value
         t0 = time.perf_counter()
         groups = []
         specs = []
@@ -702,7 +778,18 @@ class Pipeline:
                 specs.append((ok, len(win)))
         verdicts = _sync_window([v for _, v in groups], specs,
                                 tracer=self.tracer, track="sink")
-        return groups, verdicts, time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        disp = _DISPATCHES.value - d0
+        self._egress_windows_n += 1
+        self._egress_dispatches += disp
+        mon = self.monitor
+        if mon.enabled:
+            rows = sum(len(w) for w in parts)
+            mon.record_window(
+                "egress", rows=rows, ok_rows=int(verdicts.sum()),
+                bytes=sum(len(w) * int(w.n_words) * 4 for w in parts),
+                seconds=dt, dispatches=disp)
+        return groups, verdicts, dt
 
     # ------------------------------------- per-chunk oracle (window_chunks=1)
 
@@ -735,6 +822,7 @@ class Pipeline:
         if len(m.per_worker) < len(pool):
             m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
         tr = self.tracer
+        mon = self.monitor
         audit = self.directory.audit
         lat = _METRICS.histogram(f"pipeline.stage.{st.name}.window_seconds")
         while True:
@@ -747,6 +835,7 @@ class Pipeline:
                 w = live[k]
                 outs: List[SealedChunk] = []
                 for chunk in queue:
+                    d0 = _DISPATCHES.value
                     t0 = time.perf_counter()
                     with tr.span("stage.chunk", cat="dispatch",
                                  track=f"{st.name}/w{w}",
@@ -760,6 +849,18 @@ class Pipeline:
                     dt = time.perf_counter() - t0
                     m.seconds += dt
                     lat.observe(dt)            # the oracle's window IS a chunk
+                    m.windows += 1
+                    disp = _DISPATCHES.value - d0
+                    m.dispatches += disp
+                    if mon.enabled:
+                        mon.record_window(
+                            st.name, rows=1,
+                            ok_rows=0 if out is None else 1,
+                            bytes=0 if out is None
+                            else int(chunk.n_words) * 4,
+                            seconds=dt, queue_rows=len(window),
+                            worker_rows={w: 1}, min_epoch=chunk.epoch,
+                            dispatches=disp)
                     if out is None:
                         m.mac_failures += 1
                         audit.record("mac_failure", stage=st.name,
@@ -851,8 +952,16 @@ class Pipeline:
                      window_chunks=self.window_chunks,
                      fusion=self.fusion,
                      tracer=None if self.tracer is NULL_TRACER
-                     else self.tracer)
+                     else self.tracer,
+                     monitor=None if self.monitor is NULL_MONITOR
+                     else self.monitor)
         p._evicted_logged = self._evicted_logged
+        # ingress/egress hop accounting continues across the rescale,
+        # like the per-stage metrics below
+        p._ingress_windows_n = self._ingress_windows_n
+        p._ingress_dispatches = self._ingress_dispatches
+        p._egress_windows_n = self._egress_windows_n
+        p._egress_dispatches = self._egress_dispatches
         for sname, m in self.metrics.items():
             pw = list(m.per_worker)
             if sname == name and len(pw) < workers:
@@ -877,6 +986,11 @@ class Pipeline:
                    "mac_failure_rate": None if m.mac_failure_rate is None
                    else round(m.mac_failure_rate, 4),
                    "per_worker": list(m.per_worker),
+                   "windows": m.windows,
+                   "dispatches": m.dispatches,
+                   "dispatches_per_window":
+                   None if m.dispatches_per_window is None
+                   else round(m.dispatches_per_window, 4),
                    **({"fused_from": list(fused_from[name])}
                       if name in fused_from else {})}
             for name, m in self.metrics.items()
@@ -884,4 +998,12 @@ class Pipeline:
         if self.fusion.get("decisions"):
             out["fusion"] = {"decisions": list(self.fusion["decisions"])}
         out["audit"] = self.directory.audit.summary()
+        out["dispatch"] = {
+            "total": self._ingress_dispatches + self._egress_dispatches
+            + sum(m.dispatches for m in self.metrics.values()),
+            "ingress": {"windows": self._ingress_windows_n,
+                        "dispatches": self._ingress_dispatches},
+            "egress": {"windows": self._egress_windows_n,
+                       "dispatches": self._egress_dispatches},
+        }
         return out

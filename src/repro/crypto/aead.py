@@ -88,6 +88,14 @@ _COMPILE_CACHE_MAX = 64
 # below are the legacy shims over these
 _FP_COMPILES = _METRICS.counter("aead.fastpath.compiles")
 _FP_HITS = _METRICS.counter("aead.fastpath.hits")
+# every call below launches exactly ONE cached compiled program, so the
+# dispatch counters increment here in the eager wrappers — never inside
+# traced code, where an inc() fires once at trace time and disappears
+_DISPATCHES = _METRICS.counter("device.dispatches")
+_DISP_SEAL = _METRICS.counter("device.dispatches.aead.seal_many")
+_DISP_OPEN = _METRICS.counter("device.dispatches.aead.open_many")
+_DISP_MACKEYS = _METRICS.counter("device.dispatches.aead.mac_keys_many")
+_DISP_MAC2 = _METRICS.counter("device.dispatches.aead.mac2_many")
 
 
 def _resolve_backend(backend: Optional[str]) -> str:
@@ -221,6 +229,8 @@ def seal_many(key: jax.Array, nonces: jax.Array, words: jax.Array, *,
     _check_batch(key, nonces, words, "seal_many")
     fn = _cached_program("seal", words.shape[0], words.shape[1], backend,
                          key.ndim == 2)
+    _DISPATCHES.inc()
+    _DISP_SEAL.inc()
     return fn(key.astype(U32), nonces.astype(U32), words)
 
 
@@ -235,6 +245,8 @@ def open_many(key: jax.Array, nonces: jax.Array, cts: jax.Array,
         raise ValueError(f"open_many expects tags (B, 2), got {tags.shape}")
     fn = _cached_program("open", cts.shape[0], cts.shape[1], backend,
                          key.ndim == 2)
+    _DISPATCHES.inc()
+    _DISP_OPEN.inc()
     return fn(key.astype(U32), nonces.astype(U32), cts, tags.astype(U32))
 
 
@@ -253,6 +265,8 @@ def derive_mac_keys_many(key: jax.Array, nonces: jax.Array) -> jax.Array:
                          f"got {nonces.shape}")
     fn = _cached_program("mackeys", nonces.shape[0], 0, "jnp",
                          key.ndim == 2)
+    _DISPATCHES.inc()
+    _DISP_MACKEYS.inc()
     return fn(key.astype(U32), nonces.astype(U32))
 
 
@@ -267,6 +281,8 @@ def mac2_many(words: jax.Array, mac_keys: jax.Array, *,
                          f"(B, 4); got {words.shape} / {mac_keys.shape}")
     fn = _cached_program("mac2", words.shape[0], words.shape[1], backend,
                          True)
+    _DISPATCHES.inc()
+    _DISP_MAC2.inc()
     return fn(words.astype(U32), mac_keys.astype(U32))
 
 

@@ -89,6 +89,10 @@ def _check_mailbox(x: jax.Array, W: int) -> None:
 
 
 _EXCHANGE_CALLS = _METRICS.counter("dist.exchange_calls")
+# one eager exchange() == one launched collective program; counted here,
+# next to the legacy per-site counter (never inside the shard_map body)
+_DISPATCHES = _METRICS.counter("device.dispatches")
+_DISP_EXCHANGE = _METRICS.counter("device.dispatches.dist.exchange")
 
 
 def exchange_call_count() -> int:
@@ -102,6 +106,8 @@ def exchange(x: jax.Array, mesh, axis: str = "model", *,
              tracer=NULL_TRACER) -> jax.Array:
     """Plain all_to_all of mailbox blocks: ``y[j, i] = x[i, j]``."""
     _EXCHANGE_CALLS.inc()
+    _DISPATCHES.inc()
+    _DISP_EXCHANGE.inc()
     W = int(mesh.shape[axis])
     _check_mailbox(x, W)
     spec = _mailbox_spec(x.ndim, axis)

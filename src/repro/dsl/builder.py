@@ -170,6 +170,26 @@ class StreamBuilder:
         """The tracer attached via :meth:`trace` (None when untraced)."""
         return self._settings.get("tracer")
 
+    def monitor(self, monitor=None) -> "StreamBuilder":
+        """Attach a :class:`repro.obs.monitor.PipelineMonitor` (a fresh
+        one when ``monitor`` is None) to the compiled pipeline.  Sliding
+        per-stage health (windows/s, MB/s, p50/p95 latency, queue depth,
+        worker skew, mac-failure rate, epoch lag) updates once per
+        window while :meth:`run` streams; read it live via
+        ``builder.health_monitor.snapshot()`` or serve it with
+        ``repro.obs.export.serve_metrics``.  Monitoring stays strictly
+        off (zero-cost no-ops) unless this is called or a monitor is
+        passed to ``Pipeline.run``."""
+        from repro.obs.monitor import PipelineMonitor
+        return self._with_settings(
+            monitor=monitor if monitor is not None else PipelineMonitor())
+
+    @property
+    def health_monitor(self):
+        """The monitor attached via :meth:`monitor` (None when
+        unmonitored)."""
+        return self._settings.get("monitor")
+
     # ------------------------------------------------------------ lowering
 
     def build(self, mode: Optional[str] = None, *,
@@ -191,7 +211,8 @@ class StreamBuilder:
             window_chunks=s.get("window_chunks", 8),
             fuse=s.get("fuse", True),
             rekey_every_n=rekey_every_n,
-            tracer=s.get("tracer"))
+            tracer=s.get("tracer"),
+            monitor=s.get("monitor"))
         return self.pipeline
 
     def run(self, source: Optional[Iterable] = None, *,

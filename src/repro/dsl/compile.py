@@ -221,14 +221,15 @@ def compile_pipeline(ops: Sequence[Op], *, mode: str = "enclave",
                      seed: int = 0, directory=None, window_chunks: int = 8,
                      fuse: bool = True,
                      rekey_every_n: Optional[int] = None,
-                     tracer=None) -> Pipeline:
+                     tracer=None, monitor=None) -> Pipeline:
     """Validate, fuse, and emit a :class:`Pipeline` from a DSL op chain.
 
     ``rekey_every_n`` (when known at build time, e.g. from a spec file)
     triggers the eager cadence-vs-``epoch_history`` rejection the engine
     would otherwise raise at ``run()``.  ``tracer`` (from
-    ``StreamBuilder.trace``) is attached to the emitted pipeline; None
-    keeps tracing at its zero-cost disabled default.
+    ``StreamBuilder.trace``) and ``monitor`` (from
+    ``StreamBuilder.monitor``) are attached to the emitted pipeline;
+    None keeps each at its zero-cost disabled default.
     """
     stage_dicts = validate(ops, mode)
     fused, fused_from, decisions = plan_fusion(stage_dicts, fuse)
@@ -237,6 +238,8 @@ def compile_pipeline(ops: Sequence[Op], *, mode: str = "enclave",
         kw["directory"] = directory
     if tracer is not None:
         kw["tracer"] = tracer
+    if monitor is not None:
+        kw["monitor"] = monitor
     p = Pipeline([_to_stage(s) for s in fused],
                  SecureStreamConfig(mode=mode),
                  seed=seed, window_chunks=window_chunks,

@@ -6,6 +6,12 @@ import jax.numpy as jnp
 
 from repro.kernels.enclave_map.enclave_map import (  # noqa: F401
     OPS, enclave_apply, enclave_apply_rows)
+from repro.obs.metrics import REGISTRY as _METRICS
+
+# each wrapper call launches exactly one jitted enclave program — count
+# it here, in the eager wrapper, never inside the traced kernel
+_DISPATCHES = _METRICS.counter("device.dispatches")
+_DISP_MAP = _METRICS.counter("device.dispatches.enclave_map")
 
 
 def _on_tpu() -> bool:
@@ -14,6 +20,8 @@ def _on_tpu() -> bool:
 
 def enclave_map(key_in, key_out, nonce, counter0, data_blocks, *, op,
                 const=0.0, block_rows: int = 512):
+    _DISPATCHES.inc()
+    _DISP_MAP.inc()
     return enclave_apply(key_in, key_out, nonce, counter0, data_blocks,
                          op=op, const=const, block_rows=block_rows,
                          interpret=not _on_tpu())
@@ -28,6 +36,8 @@ def enclave_map_rows(keys_in, keys_out, nonces, counters, rows, *, op,
     a tile multiple (padded tail rows use zero cipher parameters and are
     sliced off).  One grid sweep processes a whole window of chunks.
     """
+    _DISPATCHES.inc()
+    _DISP_MAP.inc()
     R = rows.shape[0]
     ones = jnp.ones((R, 1), jnp.uint32)
     kin = keys_in.reshape(1, 8) * ones if keys_in.ndim == 1 else keys_in

@@ -34,6 +34,8 @@ KINDS = (
     "eviction",         # the engine first skipped a revoked worker
     "quote_rejected",   # a quote failed policy verification
     "nonce_exhausted",  # a counter reservation would wrap the nonce space
+    "slo_breach",       # a Watchdog SLO rule crossed its declared limit
+    "stall",            # no window progressed for the rule's grace period
 )
 
 
@@ -110,6 +112,13 @@ class AuditLog:
         """Events as plain dicts (JSON-ready)."""
         return [{"seq": e.seq, "kind": e.kind, **e.detail}
                 for e in self._events]
+
+    def clear(self) -> None:
+        """Drop every retained event and the drop count; ``seq`` keeps
+        counting (a cleared log is still the same stream, so ordering
+        assertions across a clear stay meaningful)."""
+        self._events.clear()
+        self.dropped = 0
 
     def __len__(self) -> int:
         return len(self._events)

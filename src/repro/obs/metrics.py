@@ -174,3 +174,23 @@ class MetricsRegistry:
 
 #: The process-wide default registry every layer registers into.
 REGISTRY = MetricsRegistry()
+
+#: Every compiled-program launch site (aead fastpath seal/open_many,
+#: enclave_map, eager cwmac, dist.exchange) increments this one counter
+#: in its eager Python wrapper — NEVER inside traced code, where an
+#: ``inc()`` would fire once at trace time and then vanish into the
+#: compiled program.  Per-site breakdowns live under
+#: ``device.dispatches.<site>``.
+DISPATCHES = REGISTRY.counter("device.dispatches")
+
+
+def dispatch_count() -> int:
+    """Total compiled-program launches since the last reset — the
+    megakernel roadmap item's regression signal next to
+    ``host_sync_count()``: fusing kernels must DROP this number."""
+    return DISPATCHES.value
+
+
+def reset_dispatch_count() -> None:
+    """Zero the global dispatch counter and every per-site breakdown."""
+    REGISTRY.reset("device.dispatches")

@@ -82,9 +82,21 @@ class NullTracer:
                 track: str = "main", **args) -> None:
         return None
 
+    def counter(self, name: str, value: float, track: str = "main") -> None:
+        return None
+
 
 #: The module-wide disabled tracer every component defaults to.
 NULL_TRACER = NullTracer()
+
+
+@dataclass
+class CounterSample:
+    """One sampled counter value (queue depth, windows/s) on a track."""
+    name: str
+    track: str
+    t: float                      # seconds since the tracer's t0
+    value: float
 
 
 class _SpanCtx:
@@ -120,6 +132,7 @@ class Tracer:
         self._clock = time.perf_counter
         self._t0 = self._clock()
         self.spans: List[Span] = []
+        self.counters: List[CounterSample] = []
         self._stack: List[int] = []          # open span ids (parent chain)
 
     # ------------------------------------------------------------ recording
@@ -145,6 +158,13 @@ class Tracer:
                  args=args)
         self.spans.append(s)
         return s
+
+    def counter(self, name: str, value: float, track: str = "main") -> None:
+        """Sample a load curve (queue depth, windows/s) — rendered by
+        Perfetto as a stacked area chart via Chrome "C" events."""
+        self.counters.append(CounterSample(
+            name=name, track=track, t=self._clock() - self._t0,
+            value=float(value)))
 
     # -------------------------------------------------------------- queries
 
@@ -189,6 +209,13 @@ class Tracer:
                                                       bool, type(None)))
                                   else str(v)) for k, v in s.args.items()}
             events.append(ev)
+        for c in self.counters:
+            tid = tids.setdefault(c.track, len(tids))
+            events.append({
+                "name": c.name, "cat": "load", "ph": "C", "pid": 1,
+                "tid": tid, "ts": round(c.t * 1e6, 3),
+                "args": {"value": c.value},
+            })
         meta = [{"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
                  "args": {"name": "repro.pipeline"}}]
         meta += [{"name": "thread_name", "ph": "M", "pid": 1, "tid": tid,

@@ -280,7 +280,7 @@ def _src(n=9):
         (64,)).astype(np.float32)) for i in range(n)]
 
 
-def _run_8stage(src, tracer=None):
+def _run_8stage(src, tracer=None, monitor=None):
     """One 8-stage encrypted run with rekey_every_n=3 and a mid-stream
     revocation of s3/w1; returns (pipeline, outputs, epoch_at_revoke)."""
     from repro.attest.directory import KeyDirectory
@@ -300,7 +300,7 @@ def _run_8stage(src, tracer=None):
 
     got = []
     p.run(source(), on_result=lambda r: got.append(np.asarray(r)),
-          rekey_every_n=3, tracer=tracer)
+          rekey_every_n=3, tracer=tracer, monitor=monitor)
     return p, got, state["epoch_at_revoke"]
 
 
