@@ -85,7 +85,8 @@ def _build_dsl(wc: int, seed: int = 0) -> Pipeline:
 
 def _run_windowed(wc: int, n_chunks: int, chunk_words: int, *,
                   rekey=None, revoke_at=None, seed: int = 0,
-                  build=_build_manual, tracer=None, monitor=None):
+                  build=_build_manual, tracer=None, monitor=None,
+                  retry=None, chaos=None):
     """One 8-stage encrypted run at window factor ``wc``; returns
     (seconds, terminal reduce array)."""
     p = build(wc, seed)
@@ -101,7 +102,7 @@ def _run_windowed(wc: int, n_chunks: int, chunk_words: int, *,
 
     t0 = time.perf_counter()
     out = p.run(source(), rekey_every_n=rekey, tracer=tracer,
-                monitor=monitor)
+                monitor=monitor, retry=retry, chaos=chaos)
     jax.block_until_ready(out)
     return time.perf_counter() - t0, np.asarray(out)
 
@@ -257,6 +258,61 @@ def run(quick: bool = False):
                  f"overhead={max(0.0, m_overhead) * 100:.1f}% (budget <=3% "
                  f"enabled, 0% disabled) dispatches={disp_run} "
                  f"dpw_s1={dpw:.1f} stages={len(snap['stages'])}"))
+
+    # ---- fault-tolerant engine budget: <= 2% chaos-off, recovery
+    # throughput chaos-on.  Chaos-off: the FT stage loop (replay buffer
+    # retain/ack, per-share dispatch accounting, fault polls against an
+    # empty plan) vs the plain window engine, as interleaved pairs with
+    # the same escalating-rounds discipline as pipeline.traced.
+    # Chaos-on: a fixed fault schedule (transient crash, tamper, dropped
+    # verdict — retry + two replays, no wall-clock sleeps) reports
+    # recovered MB/s and asserts the terminal reduce is bit-identical to
+    # the fault-free run.
+    from repro.ft.chaos import ChaosPlan, FaultSpec
+    from repro.ft.retry import RetryPolicy
+
+    def _cpair():
+        off, o_off = _run_windowed(8, n_chunks, chunk_words)
+        on, o_on = _run_windowed(8, n_chunks, chunk_words,
+                                 retry=RetryPolicy())
+        assert np.array_equal(o_off, o_on)
+        return off, on
+
+    _cpair()                               # untimed: compile the FT path
+    dt_coff = dt_con = float("inf")
+    for round_ in range(3):                    # extra rounds only if over
+        for _ in range(reps):
+            off, on = _cpair()
+            dt_coff = min(dt_coff, off)
+            dt_con = min(dt_con, on)
+        if dt_con / dt_coff - 1.0 <= 0.02:
+            break
+    ft_overhead = dt_con / dt_coff - 1.0
+    assert ft_overhead <= 0.02, \
+        f"FT engine overhead {ft_overhead * 100:.1f}% (chaos off) " \
+        f"exceeds the 2% budget"
+
+    def _chaos_plan():
+        return ChaosPlan(faults=[
+            FaultSpec("crash", stage="s1", round=0, worker=0,
+                      when="after"),
+            FaultSpec("tamper", stage="s4", round=0, worker=0, rows=2),
+            FaultSpec("drop_verdict", stage="s6", round=1, worker=0),
+        ])
+
+    _, out_ff = _run_windowed(8, n_chunks, chunk_words)
+    plan = _chaos_plan()
+    dt_chaos, out_chaos = _run_windowed(8, n_chunks, chunk_words,
+                                        retry=RetryPolicy(), chaos=plan)
+    assert not plan.pending(), plan.pending()
+    assert np.array_equal(out_chaos, out_ff), \
+        "chaos recovery diverged from the fault-free reduce"
+    mb = n_chunks * chunk_words * 4 / 1e6
+    rows.append(("pipeline.chaos", dt_con * 1e6,
+                 f"overhead={max(0.0, ft_overhead) * 100:.1f}% (budget "
+                 f"<=2% chaos off) recovery={mb / dt_chaos:.1f}MB/s "
+                 f"({len(plan.events)} faults: retry+2 replays, "
+                 f"bit-identical)"))
 
     # bit-identical terminal reduce under mid-stream rekeying + a live
     # revocation, batched engine vs the per-chunk oracle on the SAME

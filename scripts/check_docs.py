@@ -135,7 +135,7 @@ def main() -> int:
         check_links(path, problems)
         check_fences(path, problems)
     for guide in ("architecture", "security-model", "dsl", "benchmarks",
-                  "observability"):
+                  "observability", "fault-tolerance"):
         if not (ROOT / "docs" / f"{guide}.md").exists():
             problems.append(f"required guide missing: docs/{guide}.md")
     if problems:

@@ -139,6 +139,13 @@ class KeyDirectory:
         self._rng = random.Random(f"repro-attest-{seed}")
         self._workers: Dict[str, bytes] = {}       # id -> measurement
         self._sessions: Dict[str, SessionState] = {}
+        # Admission interceptor: callable(worker_id) -> rejection reason
+        # or None.  Consulted by admit() BEFORE the quote round-trip so a
+        # fault injector (repro.ft.chaos) can make a live enrollment fail
+        # through the real admission path — the rejection lands in the
+        # audit log as a genuine quote_rejected event.  None in
+        # production.
+        self.admission_interceptor = None
 
     # ------------------------------------------------------------ clock
 
@@ -188,7 +195,18 @@ class KeyDirectory:
             raise
 
     def admit(self, worker_id: str) -> Quote:
-        """Quote-then-verify gate; raises on rejection, returns the quote."""
+        """Quote-then-verify gate; raises on rejection, returns the quote.
+
+        If an ``admission_interceptor`` is installed (fault injection),
+        it is consulted first: a returned reason string fails the
+        handshake through the same audit path as a bad quote."""
+        icpt = self.admission_interceptor
+        if icpt is not None:
+            reason = icpt(worker_id)
+            if reason is not None:
+                self.audit.record("quote_rejected", worker=worker_id,
+                                  reason=reason)
+                raise QuoteError(reason, worker_id)
         q = self.quote_for(worker_id)
         self.verify(q)
         return q

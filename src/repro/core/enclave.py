@@ -184,6 +184,32 @@ def _window_cipher_params(key, win: SealedWindow
     return keys, jnp.asarray(nonces)
 
 
+def _reseal_coords(win: SealedWindow, reseal_as
+                   ) -> Tuple[SealedWindow, List[int], List[int]]:
+    """Resolve the OUTBOUND cipher coordinates of a window dispatch.
+
+    ``reseal_as`` is ``None`` (steady state: re-seal under the rows'
+    ingress coordinates) or ``(counters, epoch)`` — a freshly reserved
+    contiguous counter block at one epoch (``EdgeHandle.reserve_window``)
+    that a fault-tolerant re-execution seals under instead, because the
+    ingress coordinates were already spent on the outbound key by the
+    first dispatch of this share.  Returns (a coordinate *view* window
+    for ``_window_cipher_params``, out counters, out epochs).
+    """
+    if reseal_as is None:
+        return win, win.counters, win.epochs
+    counters, epoch = reseal_as
+    out_counters = [int(c) for c in counters]
+    if len(out_counters) != len(win):
+        raise ValueError(
+            f"reseal_as carries {len(out_counters)} counters for a "
+            f"{len(win)}-row window — a re-executed share must reserve "
+            f"exactly one fresh counter per row")
+    out_epochs = [int(epoch)] * len(win)
+    view = replace(win, counters=out_counters, epochs=out_epochs)
+    return view, out_counters, out_epochs
+
+
 def seal_tensors_window(key, counters: Sequence[int],
                         xs: Sequence[jax.Array],
                         epoch: Optional[int] = None) -> SealedWindow:
@@ -386,7 +412,7 @@ class EnclaveExecutor:
     # -- window-native entry points (deferred MAC verdicts) -----------------
 
     def run_window(self, fn: Callable[[jax.Array], jax.Array],
-                   win: SealedWindow
+                   win: SealedWindow, *, reseal_as=None
                    ) -> Tuple[SealedWindow, Optional[jax.Array]]:
         """Batched :meth:`run` on a whole window: ``open_many`` -> ``fn``
         per decoded row -> ``seal_many``.
@@ -397,6 +423,14 @@ class EnclaveExecutor:
         the caller after its one-per-window host sync.  ``fn`` itself is
         applied row-wise (custom closures are not assumed vmappable); the
         static-op path (:meth:`run_static_window`) is fully vectorized.
+
+        ``reseal_as=(counters, epoch)`` seals the OUTPUT under a freshly
+        reserved counter block instead of the rows' ingress coordinates —
+        the fault-tolerance retry path: the input still opens under its
+        original coordinates, but re-sealing under them would re-spend a
+        (key, nonce, counter) triple the first dispatch already used on
+        the outbound key.  The returned window carries the new
+        counters/epochs.
         """
         if self.mode == "plain":
             xb = aead.words_to_tensor_batch(win.words, win.meta)
@@ -409,6 +443,7 @@ class EnclaveExecutor:
                 "enclave mode only executes registered static operators "
                 "(run_static_window); arbitrary closures cannot be "
                 "attested — the paper's no-dynamic-linking rule.")
+        out_view, out_ctrs, out_epochs = _reseal_coords(win, reseal_as)
         with self.tracer.span("enclave.open", cat="dispatch",
                               track=self.track, rows=len(win)):
             keys_in, nonces_in = _window_cipher_params(self.key_in, win)
@@ -420,12 +455,15 @@ class EnclaveExecutor:
             words, meta = aead.tensor_to_words_batch(yb)
         with self.tracer.span("enclave.seal", cat="dispatch",
                               track=self.track, rows=len(win)):
-            keys_out, nonces_out = _window_cipher_params(self.key_out, win)
+            keys_out, nonces_out = _window_cipher_params(self.key_out,
+                                                         out_view)
             ct, tags = aead.seal_many(keys_out, nonces_out, words)
         return replace(win, words=ct, tags=tags, meta=meta,
-                       n_words=words.shape[1]), ok
+                       n_words=words.shape[1], counters=out_ctrs,
+                       epochs=out_epochs), ok
 
-    def run_static_window(self, op: str, const: float, win: SealedWindow
+    def run_static_window(self, op: str, const: float, win: SealedWindow,
+                          *, reseal_as=None
                           ) -> Tuple[SealedWindow, Optional[jax.Array]]:
         """Batched :meth:`run_static` on a whole window (deferred
         verdicts, see :meth:`run_window`): the steady-state hot path — a
@@ -435,13 +473,18 @@ class EnclaveExecutor:
         rows -> ``seal_many``.  enclave: batched ciphertext MAC check +
         one ``enclave_map_rows`` grid sweep (per-row nonce/counter, and
         per-row keys when the window straddles a rekey epoch flip), so
-        plaintext stays VMEM-confined row by row.
+        plaintext stays VMEM-confined row by row.  ``reseal_as`` seals
+        the output under a fresh counter block (see :meth:`run_window`);
+        in enclave mode the fused kernel re-encrypts directly under the
+        outbound coordinates, so plaintext stays VMEM-confined on the
+        retry path too.
         """
         if self.mode == "plain":
             return replace(win, words=_apply_static_words(
                 op, const, win.words)), None
+        out_view, out_ctrs, out_epochs = _reseal_coords(win, reseal_as)
         keys_in, nonces_in = _window_cipher_params(self.key_in, win)
-        keys_out, nonces_out = _window_cipher_params(self.key_out, win)
+        keys_out, nonces_out = _window_cipher_params(self.key_out, out_view)
         if self.mode == "encrypted":
             with self.tracer.span("enclave.open", cat="dispatch",
                                   track=self.track, rows=len(win)):
@@ -453,7 +496,8 @@ class EnclaveExecutor:
             with self.tracer.span("enclave.seal", cat="dispatch",
                                   track=self.track, rows=len(win)):
                 ct, tags = aead.seal_many(keys_out, nonces_out, words)
-            return replace(win, words=ct, tags=tags), ok
+            return replace(win, words=ct, tags=tags, counters=out_ctrs,
+                           epochs=out_epochs), ok
         # enclave: MAC check on ciphertext happens outside the enclave
         # (public data), batched: one mac-key derivation + one MAC program.
         B, n_words = len(win), win.n_words
@@ -474,15 +518,22 @@ class EnclaveExecutor:
                 else jnp.repeat(keys_in, n_blocks, axis=0)
             row_kout = keys_out if keys_out.ndim == 1 \
                 else jnp.repeat(keys_out, n_blocks, axis=0)
+            kw = {}
+            if reseal_as is not None:
+                # the fused kernel re-encrypts under the FRESH coordinates
+                # (per-block keystream counters stay 1..n_blocks — the
+                # chunk counter only enters through the nonce)
+                kw["nonces_out"] = jnp.repeat(nonces_out, n_blocks, axis=0)
             out_words = enclave_ops.enclave_map_rows(
                 row_kin, row_kout, row_nonces, row_ctrs, rows, op=op,
-                const=const).reshape(B, -1)[:, :n_words]
+                const=const, **kw).reshape(B, -1)[:, :n_words]
         # re-tag under the outbound keys, batched
         with self.tracer.span("enclave.seal", cat="dispatch",
                               track=self.track, rows=B):
             mk_out = aead.derive_mac_keys_many(keys_out, nonces_out)
             tags_out = aead.mac2_many(out_words, mk_out)
-        return replace(win, words=out_words, tags=tags_out), ok
+        return replace(win, words=out_words, tags=tags_out,
+                       counters=out_ctrs, epochs=out_epochs), ok
 
     # -- chunk-list wrappers over the window entry points -------------------
 

@@ -51,6 +51,7 @@ import numpy as np
 from repro.attest.directory import (EdgeHandle, KeyDirectory,
                                     KeyDirectoryError)
 from repro.attest.measure import IO_ENDPOINT, measure_stage
+from repro.attest.quote import QuoteError
 from repro.configs.base import SecureStreamConfig
 from repro.core import router as R
 from repro.core.enclave import (EnclaveExecutor, SealedChunk, SealedWindow,
@@ -213,7 +214,9 @@ class Pipeline:
                  window_chunks: int = 8,
                  fusion: Optional[Dict[str, Any]] = None,
                  tracer=None,
-                 monitor=None):
+                 monitor=None,
+                 retry=None,
+                 chaos=None):
         self.stages = list(stages)
         self.secure = secure
         self.seed = seed
@@ -224,6 +227,13 @@ class Pipeline:
         # live health monitoring follows the same contract: NULL_MONITOR
         # is enabled=False, so the per-window record is one attr check
         self.monitor = monitor if monitor is not None else NULL_MONITOR
+        # fault tolerance is opt-in the same way: ``retry`` is a
+        # repro.ft.retry.RetryPolicy, ``chaos`` a repro.ft.chaos.ChaosPlan
+        # (fault injection for tests/benchmarks).  When both are None the
+        # engine runs the original non-FT stage stream untouched.
+        self.retry = retry
+        self.chaos = chaos
+        self._last_ft = None        # FTContext of the most recent run
         # dispatch/window accounting for the ingress and egress hops
         # (stage hops live in StageMetrics)
         self._ingress_windows_n = 0
@@ -490,6 +500,424 @@ class Pipeline:
                 epochs=[e[3] for e in entries],
                 meta=outs[0].meta, n_words=outs[0].n_words)
 
+    # ------------------------------------------------------ fault tolerance
+
+    def _ft_fresh_coords(self, n: int):
+        """Reserve a FRESH counter block for a re-execution.
+
+        Every retry / failover / backup / replay re-seals its rows under
+        counters reserved from the INGRESS edge at the current epoch —
+        the one allocator whose blocks are globally collision-free across
+        every edge (mid-pipeline edges never advance the session count),
+        so a re-executed share can never re-spend a (key, nonce, counter)
+        triple already used on any outbound key.  Plain mode has no
+        nonces: returns None (re-execution keeps original coordinates).
+        """
+        h0 = self.keys[0]
+        if h0 is None:
+            return None
+        base, epoch = h0.reserve_window(n)
+        return (list(range(base, base + n)), epoch)
+
+    def _ft_exec(self, st: Stage, ex: EnclaveExecutor, sub: SealedWindow,
+                 coords):
+        """One batched open->op->seal of a share.  ``coords`` =
+        (counters, epoch) re-seals under fresh ingress-reserved
+        coordinates (the re-execution path); None keeps steady state."""
+        if st.fn is not None:
+            return ex.run_window(st.fn, sub, reseal_as=coords)
+        return ex.run_static_window(st.op, st.const, sub, reseal_as=coords)
+
+    def _ft_pick_survivor(self, st: Stage, ft, exclude: int,
+                          prefer=None) -> Optional[int]:
+        """A live, not-dead worker other than ``exclude`` — honoring the
+        backup dispatcher's placement hint when it is usable.
+
+        Recomputed from the CURRENT worker set (not the round-start live
+        list): a spare enrolled earlier in the same round must absorb
+        later failovers instead of triggering more enrollments."""
+        cands = []
+        for x in range(max(1, st.workers)):
+            if x == exclude or ft.is_dead(st.name, x):
+                continue
+            if self.directory.policy.is_revoked(self.worker_id(st.name, x)):
+                continue
+            cands.append(x)
+        if not cands:
+            return None
+        if prefer is not None and prefer in cands:
+            return prefer
+        return cands[0]
+
+    def enroll_spare(self, stage_name: str) -> int:
+        """Enroll + admit one spare worker for a stage, live.
+
+        The spare takes the same attested admission path as build time
+        (measure -> enroll -> quote -> verify); edge sessions are
+        stage-scoped (``stage/<name>`` endpoints), so the spare joins the
+        existing attested channels — ``KeyDirectory.establish`` runs only
+        if an edge somehow lost its session.  Returns the new worker
+        index; raises :class:`repro.attest.quote.QuoteError` if admission
+        fails (including a chaos-injected handshake failure).
+        """
+        idx, st = next((i, s) for i, s in enumerate(self.stages)
+                       if s.name == stage_name)
+        d = self.directory
+        w = max(1, st.workers)
+        wid = self.worker_id(st.name, w)
+        meas = measure_stage(op=st.op, const=st.const, fn=st.fn, sgx=st.sgx)
+        d.policy.allow(meas)
+        d.enroll(wid, meas)
+        d.admit(wid)                 # raises unless the quote verifies
+        if self.secure.mode != "plain":
+            endpoints = ["io/source"] \
+                + [f"stage/{s.name}" for s in self.stages] + ["io/sink"]
+            for e in (idx, idx + 1):
+                if not d.has_session(f"edge{e}"):
+                    d.establish(f"edge{e}", endpoints[e], endpoints[e + 1],
+                                stage_id=e)
+        st.workers = w + 1
+        return w
+
+    def _ft_enroll_spare(self, st: Stage, pool: List[EnclaveExecutor],
+                         ft) -> Optional[int]:
+        """Failover fallback when a stage has no survivors: enroll a
+        spare through the live admission path and extend the worker pool.
+        A rejected handshake (chaos ``enroll_fail``) is retried once with
+        the next spare id; None if no spare could be admitted."""
+        for _ in range(2):
+            try:
+                w = self.enroll_spare(st.name)
+            except QuoteError:
+                ft.enroll_failures.inc()
+                continue
+            i = next(ix for ix, s in enumerate(self.stages)
+                     if s.name == st.name)
+            mode = self.secure.mode
+            st_mode = mode if st.sgx else ("plain" if mode == "plain"
+                                           else "encrypted")
+            ex = EnclaveExecutor(st_mode, self.keys[i], self.keys[i + 1])
+            ex.tracer = self.tracer
+            ex.track = f"{st.name}/w{w}"
+            pool.append(ex)
+            m = self.metrics[st.name]
+            if len(m.per_worker) < len(pool):
+                m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
+            return w
+        return None
+
+    def _ft_dispatch_share(self, st: Stage, pool: List[EnclaveExecutor],
+                           ft, rnd: int, w: int,
+                           sub: SealedWindow, share_id: int):
+        """Dispatch one worker share under the retry policy.
+
+        Consults the chaos plan for crash/stall faults at this
+        (stage, round, worker) hook, applies bounded retry with
+        exponential backoff on the same worker, fails the share over to
+        a survivor (or a live-enrolled spare) when the worker is gone,
+        and races an injected straggler against a speculative backup
+        copy on another worker.  EVERY re-execution re-seals under fresh
+        ingress-reserved counters (:meth:`_ft_fresh_coords`).  Returns
+        (final worker, out window, deferred verdict vector); raises if
+        the share cannot be placed anywhere.
+        """
+        audit = self.directory.audit
+        policy = ft.policy
+        chaos = ft.chaos
+        det = ft.detector(st.name)
+        bdisp = ft.dispatcher(st.name, max(1, st.workers))
+        bdisp.track(share_id, w)
+        attempts = 0
+        fresh = False
+        t_start = time.perf_counter()
+        while True:
+            spec = None if chaos is None \
+                else chaos.crash_for(st.name, rnd, w)
+            dead = ft.is_dead(st.name, w)
+            out = ok = dt = None
+            if not dead and (spec is None or spec.when == "after"):
+                coords = self._ft_fresh_coords(len(sub)) if fresh else None
+                t0 = time.perf_counter()
+                out, ok = self._ft_exec(st, pool[w], sub, coords)
+                dt = time.perf_counter() - t0
+            if spec is not None:
+                # the fault fires exactly once: one worker_failed per
+                # injected crash, regardless of how many shares it costs
+                ft.worker_failures.inc()
+                audit.record("worker_failed", stage=st.name,
+                             worker=self.worker_id(st.name, w),
+                             reason="crash", fatal=spec.fatal, round=rnd)
+                if spec.fatal:
+                    ft.mark_dead(st.name, w)
+            if spec is not None or dead:
+                # the share (or its result) is lost
+                attempts += 1
+                alive = not ft.is_dead(st.name, w)
+                within = attempts < policy.max_attempts and (
+                    policy.deadline_s is None
+                    or time.perf_counter() - t_start < policy.deadline_s)
+                if alive and within:
+                    ft.retries.inc()
+                    audit.record("share_retried", stage=st.name,
+                                 worker=self.worker_id(st.name, w),
+                                 attempt=attempts, round=rnd)
+                    policy.sleep(policy.backoff(attempts))
+                    fresh = True
+                    continue
+                if not policy.failover:
+                    raise KeyDirectoryError(
+                        f"share of stage {st.name!r} lost worker "
+                        f"{self.worker_id(st.name, w)} and failover is "
+                        f"disabled by the retry policy")
+                w2 = self._ft_pick_survivor(st, ft, exclude=w)
+                if w2 is None and policy.enroll_spare:
+                    w2 = self._ft_enroll_spare(st, pool, ft)
+                if w2 is None:
+                    raise KeyDirectoryError(
+                        f"share of stage {st.name!r} has no survivor to "
+                        f"fail over to and no spare could be admitted")
+                ft.failovers.inc()
+                audit.record("share_failover", stage=st.name,
+                             worker=self.worker_id(st.name, w),
+                             to=self.worker_id(st.name, w2),
+                             reason="crash", round=rnd)
+                bdisp.track(share_id, w2)
+                w = w2
+                attempts = 0
+                fresh = True
+                continue
+            # success path: race an injected stall against the cutoff
+            stall = None if chaos is None \
+                else chaos.stall_for(st.name, rnd, w)
+            if stall is not None:
+                observed = dt + stall.seconds
+                if observed > policy.timeout_for(det):
+                    ft.worker_failures.inc()
+                    audit.record("worker_failed", stage=st.name,
+                                 worker=self.worker_id(st.name, w),
+                                 reason="stall", round=rnd)
+                    hint = bdisp.reissue(share_id)
+                    w2 = self._ft_pick_survivor(st, ft, exclude=w,
+                                                prefer=hint)
+                    if w2 is not None:
+                        # speculative backup wins; the original result
+                        # arrives late and deduplicates
+                        ft.backups.inc()
+                        audit.record("share_failover", stage=st.name,
+                                     worker=self.worker_id(st.name, w),
+                                     to=self.worker_id(st.name, w2),
+                                     reason="backup", round=rnd)
+                        coords = self._ft_fresh_coords(len(sub))
+                        t0 = time.perf_counter()
+                        out2, ok2 = self._ft_exec(st, pool[w2], sub,
+                                                  coords)
+                        det.observe(time.perf_counter() - t0)
+                        bdisp.track(share_id, w2)
+                        bdisp.complete(share_id)   # backup completes...
+                        bdisp.complete(share_id)   # ...original is a dup
+                        return w2, out2, ok2
+                    # nobody to back up on: keep the slow result
+                det.observe(observed)
+                bdisp.complete(share_id)
+                return w, out, ok
+            det.observe(dt)
+            bdisp.complete(share_id)
+            return w, out, ok
+
+    def _stage_stream_ft(self, upstream: Iterator[SealedWindow], st: Stage,
+                         pool: List[EnclaveExecutor], window_chunks: int,
+                         ft) -> Iterator[SealedWindow]:
+        """Fault-tolerant sibling of :meth:`_stage_stream`.
+
+        Same round structure (pull -> round-robin -> one batched
+        dispatch per worker share -> ONE deferred-verdict host sync ->
+        merge in stream order), with the fault-tolerance hooks around
+        it: the round's sealed input parts are RETAINED in the replay
+        buffer until its verdicts are folded in; each share dispatch
+        goes through :meth:`_ft_dispatch_share` (chaos crash/stall
+        hooks, retry/backoff, failover, speculative backup); tampered
+        shares MAC-fail at the sync and their rows are re-executed from
+        the retained clean parts; a dropped verdict sync voids the whole
+        share, which is likewise replayed.  Replayed rows re-seal under
+        fresh ingress counters, and the merge still orders by original
+        row index — so the surviving stream, and any terminal reduce
+        over it, is bit-identical to the fault-free run.
+        """
+        m = self.metrics[st.name]
+        if len(m.per_worker) < len(pool):
+            m.per_worker.extend([0] * (len(pool) - len(m.per_worker)))
+        tr = self.tracer
+        audit = self.directory.audit
+        chaos = ft.chaos
+        secure = self.secure.mode != "plain"
+        lat = _METRICS.histogram(f"pipeline.stage.{st.name}.window_seconds")
+        depth = _METRICS.gauge(f"pipeline.stage.{st.name}.queue_rows")
+        phase = 0
+        rnd = -1
+        while True:
+            rnd += 1
+            live = [w for w in self._live_workers(st)
+                    if not ft.is_dead(st.name, w)]
+            if not live:
+                # every worker is dead: last-ditch live spare enrollment
+                w = self._ft_enroll_spare(st, pool, ft)
+                if w is None:
+                    raise KeyDirectoryError(
+                        f"every worker of stage {st.name!r} is dead and "
+                        f"no spare could be admitted")
+                live = [w]
+            target = len(live) * window_chunks
+            parts: List[SealedWindow] = []
+            got = 0
+            while got < target:
+                win = next(upstream, None)
+                if win is None:
+                    break
+                parts.append(win)
+                got += len(win)
+            if not parts:
+                return
+            # retain the sealed inputs (still under their reserved nonce
+            # blocks) until this round's verdict sync is folded in
+            ft.buffer.retain(st.name, rnd, parts)
+            depth.set(got)
+            tr.counter("queue_rows", got, track=st.name)
+            live = [w for w in self._live_workers(st)
+                    if not ft.is_dead(st.name, w)]
+            L = len(live)
+            d0 = _DISPATCHES.value
+            t0 = time.perf_counter()
+            dispatches = []          # (part idx, worker, row idxs, out, ok)
+            flags = []               # aligned: per-share fault markers
+            with tr.span("stage.dispatch", cat="dispatch", track=st.name,
+                         rows=got, workers=L):
+                for pi, win in enumerate(parts):
+                    B = len(win)
+                    assign = [(phase + j) % L for j in range(B)]
+                    phase += B
+                    for k in range(L):
+                        idxs = [j for j in range(B) if assign[j] == k]
+                        if not idxs:
+                            continue
+                        sub = win if len(idxs) == B else win.select(idxs)
+                        w = live[k]
+                        tampered = False
+                        if secure and chaos is not None:
+                            tf = chaos.tamper_for(st.name, rnd, w)
+                            if tf is not None:
+                                # corrupt the dispatch COPY only — the
+                                # retained rows stay clean for replay
+                                sub = chaos.apply_tamper(tf, sub)
+                                tampered = True
+                        share_id = ft.next_share_id()
+                        w2, out, ok = self._ft_dispatch_share(
+                            st, pool, ft, rnd, w, sub, share_id)
+                        verdict_dropped = False
+                        if secure and chaos is not None:
+                            dv = chaos.drop_verdict_for(st.name, rnd, w)
+                            verdict_dropped = dv is not None
+                        dispatches.append((pi, w2, idxs, out, ok))
+                        flags.append({"tampered": tampered,
+                                      "verdict_dropped": verdict_dropped})
+            verdicts = _sync_window(
+                [d[3].words for d in dispatches],
+                [(d[4], len(d[3])) for d in dispatches],
+                tracer=tr, track=st.name)
+            dt = time.perf_counter() - t0
+            m.seconds += dt
+            lat.observe(dt)
+            m.windows += 1
+            disp = _DISPATCHES.value - d0
+            m.dispatches += disp
+            tr.counter("windows_per_s", (1.0 / dt) if dt > 0 else 0.0,
+                       track=st.name)
+            # ---- per-row accounting + replay scheduling
+            off = 0
+            final = []               # dispatch tuples fed to the merge
+            marks: List[np.ndarray] = []
+            replays = []             # (part idx, worker, row js, reason)
+            for di, (pi, w, idxs, out, _) in enumerate(dispatches):
+                v = np.array(verdicts[off: off + len(idxs)], copy=True)
+                off += len(idxs)
+                if flags[di]["verdict_dropped"]:
+                    # the host never saw this share's verdicts: every
+                    # row is unverified -> replay the whole share
+                    replays.append((pi, w, list(idxs), "verdict_dropped"))
+                    continue
+                for jj, alive_row in enumerate(v):
+                    if alive_row:
+                        m.chunks += 1
+                        m.per_worker[w] += 1
+                        m.bytes += int(parts[pi].n_words) * 4
+                    else:
+                        m.mac_failures += 1
+                        pool[w].errors += 1
+                        audit.record("mac_failure", stage=st.name,
+                                     worker=self.worker_id(st.name, w),
+                                     row=out.counters[jj],
+                                     epoch=out.epochs[jj])
+                final.append((pi, w, idxs, out, None))
+                marks.append(v)
+                failed_js = [j for jj, j in enumerate(idxs) if not v[jj]]
+                if failed_js and secure and ft.policy.replay_mac_failures:
+                    replays.append((pi, w, failed_js, "mac_failure"))
+            if replays:
+                rd = []
+                for pi, w, row_js, reason in replays:
+                    sub = parts[pi].select(row_js)
+                    coords = self._ft_fresh_coords(len(sub))
+                    wr = w if not ft.is_dead(st.name, w) else live[0]
+                    out2, ok2 = self._ft_exec(st, pool[wr], sub, coords)
+                    rd.append((pi, wr, row_js, out2, ok2))
+                    ft.replays.inc()
+                    audit.record("window_replayed", stage=st.name,
+                                 worker=self.worker_id(st.name, wr),
+                                 rows=len(row_js), reason=reason,
+                                 round=rnd)
+                rv = _sync_window([d[3].words for d in rd],
+                                  [(d[4], len(d[3])) for d in rd],
+                                  tracer=tr, track=st.name)
+                roff = 0
+                for (pi, _, row_js, reason), (pi2, wr, _, out2, _) \
+                        in zip(replays, rd):
+                    v2 = np.array(rv[roff: roff + len(row_js)], copy=True)
+                    roff += len(row_js)
+                    for jj, alive_row in enumerate(v2):
+                        if alive_row:
+                            m.chunks += 1
+                            m.per_worker[wr] += 1
+                            m.bytes += int(parts[pi].n_words) * 4
+                        elif reason == "verdict_dropped":
+                            # first time this row provably failed
+                            m.mac_failures += 1
+                            audit.record(
+                                "mac_failure", stage=st.name,
+                                worker=self.worker_id(st.name, wr),
+                                row=out2.counters[jj],
+                                epoch=out2.epochs[jj])
+                        # a mac_failure replay that fails again was
+                        # already audited on the original verdict
+                    final.append((pi, wr, row_js, out2, None))
+                    marks.append(v2)
+            mon = self.monitor
+            if mon.enabled:
+                wrows: Dict[int, int] = {}
+                for _, w, idxs, _, _ in final:
+                    wrows[w] = wrows.get(w, 0) + len(idxs)
+                mon.record_window(
+                    st.name, rows=got,
+                    ok_rows=int(sum(int(v.sum()) for v in marks)),
+                    bytes=sum(len(p) * int(p.n_words) * 4 for p in parts),
+                    seconds=dt, queue_rows=got, worker_rows=wrows,
+                    min_epoch=min(min(p.epochs) for p in parts),
+                    dispatches=disp)
+            with tr.span("stage.merge", cat="pipeline", track=st.name,
+                         windows=len(parts)):
+                merged = list(self._merge_outputs(parts, final, marks))
+            # the round's verdicts are folded in: release retained rows
+            ft.buffer.ack(st.name, rnd)
+            yield from merged
+
     def _ingress_stream(self, source: Iterable[jax.Array], mode: str,
                         rekey_every_n: Optional[int],
                         window: int) -> Iterator[SealedWindow]:
@@ -615,7 +1043,8 @@ class Pipeline:
             on_result: Optional[Callable] = None,
             rekey_every_n: Optional[int] = None,
             window_chunks: Optional[int] = None,
-            tracer=None, monitor=None) -> Any:
+            tracer=None, monitor=None,
+            retry=None, chaos=None) -> Any:
         """Stream source tensors through all stages; returns the terminal
         reduce value (if the last stage reduces) or the last chunk.
 
@@ -643,14 +1072,33 @@ class Pipeline:
         pipeline's own monitor (:data:`NULL_MONITOR` unless one was
         passed at construction); a monitored run reads only host-side
         metadata, so output stays bit-identical to an unmonitored run.
+
+        ``retry``: a :class:`repro.ft.retry.RetryPolicy` enabling
+        per-share retry/backoff, failover, and replay-based recovery for
+        this run only (requires the window engine, ``window_chunks>=2``).
+
+        ``chaos``: a :class:`repro.ft.chaos.ChaosPlan` — seeded fault
+        injection consulted at every engine hook point; implies FT with
+        the default policy if ``retry`` is not also given.  The plan's
+        ``enroll_fail`` faults are wired through the directory's
+        admission interceptor for the duration of the run.
         """
         prev_tracer = self.tracer
         prev_monitor = self.monitor
+        prev_retry = self.retry
+        prev_chaos = self.chaos
+        prev_icpt = self.directory.admission_interceptor
         if tracer is not None:
             self.tracer = tracer
         if monitor is not None:
             self.monitor = monitor
             monitor.attach(self)
+        if retry is not None:
+            self.retry = retry
+        if chaos is not None:
+            self.chaos = chaos
+        if self.chaos is not None:
+            self.directory.admission_interceptor = self.chaos.enroll_failure
         try:
             with self.tracer.span("pipeline.run", mode=self.secure.mode,
                                   stages=len(self.stages)):
@@ -659,6 +1107,9 @@ class Pipeline:
         finally:
             self.tracer = prev_tracer
             self.monitor = prev_monitor
+            self.retry = prev_retry
+            self.chaos = prev_chaos
+            self.directory.admission_interceptor = prev_icpt
 
     def _run_impl(self, source: Iterable[jax.Array],
                   on_result: Optional[Callable],
@@ -669,7 +1120,22 @@ class Pipeline:
             else max(1, int(window_chunks))
         if rekey_every_n and mode != "plain":
             wc = self._clamp_window_for_rekey(wc, rekey_every_n)
+        ft = None
+        if self.retry is not None or self.chaos is not None:
+            from repro.ft.recovery import FTContext
+            from repro.ft.retry import RetryPolicy
+            ft = FTContext(policy=self.retry if self.retry is not None
+                           else RetryPolicy(), chaos=self.chaos)
+        self._last_ft = ft
         if wc == 1:
+            if ft is not None:
+                raise ValueError(
+                    "fault tolerance (retry/chaos) needs the "
+                    "window-vectorized engine (window_chunks >= 2); the "
+                    "window factor resolved to 1 — if rekey_every_n "
+                    "clamped it, build the pipeline with a "
+                    "KeyDirectory(epoch_history=...) large enough for "
+                    "the window/rekey combination")
             # the per-chunk oracle engine: scalar seal/open per chunk
             # with a blocking verdict sync per chunk (the seed engine,
             # kept as the degenerate case / bitwise oracle)
@@ -684,8 +1150,11 @@ class Pipeline:
         end = len(self.stages) if reduce_idx is None else reduce_idx
         for i in range(end):
             st = self.stages[i]
-            stream = self._stage_stream(stream, st,
-                                        self._worker_pool(i, st), wc)
+            pool = self._worker_pool(i, st)
+            if ft is not None:
+                stream = self._stage_stream_ft(stream, st, pool, wc, ft)
+            else:
+                stream = self._stage_stream(stream, st, pool, wc)
         sink_w = max(1, self.stages[end - 1].workers) if end else 1
         egress_rows = sink_w * wc
 

@@ -190,6 +190,39 @@ class StreamBuilder:
         unmonitored)."""
         return self._settings.get("monitor")
 
+    def retry(self, policy=None) -> "StreamBuilder":
+        """Attach a :class:`repro.ft.retry.RetryPolicy` (the default
+        policy when ``policy`` is None): per-share retry with bounded
+        exponential backoff, failover to survivors (or a live-enrolled
+        spare), speculative backup dispatch against stragglers, and
+        replay of MAC-failed rows from the retained ingress window —
+        every re-execution re-sealed under fresh directory-reserved
+        counters, so recovery never reuses a (key, nonce, counter)
+        triple and output stays bit-identical.  Requires the window
+        engine (``window_chunks >= 2``)."""
+        from repro.ft.retry import RetryPolicy
+        return self._with_settings(
+            retry=policy if policy is not None else RetryPolicy())
+
+    @property
+    def retry_policy(self):
+        """The policy attached via :meth:`retry` (None when FT is off)."""
+        return self._settings.get("retry")
+
+    def chaos(self, plan) -> "StreamBuilder":
+        """Attach a :class:`repro.ft.chaos.ChaosPlan`: seeded fault
+        injection (worker crashes, stalls, tampered shares, dropped
+        verdict syncs, enrollment failures) consulted at every engine
+        hook point.  Implies :meth:`retry` with the default policy if no
+        policy was attached.  Faults are deterministic per plan — the
+        chaos harness's replayability contract."""
+        return self._with_settings(chaos=plan)
+
+    @property
+    def chaos_plan(self):
+        """The plan attached via :meth:`chaos` (None when chaos is off)."""
+        return self._settings.get("chaos")
+
     # ------------------------------------------------------------ lowering
 
     def build(self, mode: Optional[str] = None, *,
@@ -212,7 +245,9 @@ class StreamBuilder:
             fuse=s.get("fuse", True),
             rekey_every_n=rekey_every_n,
             tracer=s.get("tracer"),
-            monitor=s.get("monitor"))
+            monitor=s.get("monitor"),
+            retry=s.get("retry"),
+            chaos=s.get("chaos"))
         return self.pipeline
 
     def run(self, source: Optional[Iterable] = None, *,

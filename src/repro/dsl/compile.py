@@ -221,7 +221,8 @@ def compile_pipeline(ops: Sequence[Op], *, mode: str = "enclave",
                      seed: int = 0, directory=None, window_chunks: int = 8,
                      fuse: bool = True,
                      rekey_every_n: Optional[int] = None,
-                     tracer=None, monitor=None) -> Pipeline:
+                     tracer=None, monitor=None,
+                     retry=None, chaos=None) -> Pipeline:
     """Validate, fuse, and emit a :class:`Pipeline` from a DSL op chain.
 
     ``rekey_every_n`` (when known at build time, e.g. from a spec file)
@@ -229,7 +230,9 @@ def compile_pipeline(ops: Sequence[Op], *, mode: str = "enclave",
     would otherwise raise at ``run()``.  ``tracer`` (from
     ``StreamBuilder.trace``) and ``monitor`` (from
     ``StreamBuilder.monitor``) are attached to the emitted pipeline;
-    None keeps each at its zero-cost disabled default.
+    None keeps each at its zero-cost disabled default.  ``retry`` (from
+    ``StreamBuilder.retry``) and ``chaos`` (from ``StreamBuilder.chaos``)
+    enable the fault-tolerant engine the same way.
     """
     stage_dicts = validate(ops, mode)
     fused, fused_from, decisions = plan_fusion(stage_dicts, fuse)
@@ -240,6 +243,10 @@ def compile_pipeline(ops: Sequence[Op], *, mode: str = "enclave",
         kw["tracer"] = tracer
     if monitor is not None:
         kw["monitor"] = monitor
+    if retry is not None:
+        kw["retry"] = retry
+    if chaos is not None:
+        kw["chaos"] = chaos
     p = Pipeline([_to_stage(s) for s in fused],
                  SecureStreamConfig(mode=mode),
                  seed=seed, window_chunks=window_chunks,

@@ -84,11 +84,18 @@ def run_with_recovery(
     report = RecoveryReport()
     step = restore()
     while step < total_steps:
+        resumed_from = step          # last state-consistent step
         try:
             step = run_steps(step, total_steps)
         except Exception as e:  # noqa: BLE001 — any failure -> recover
             report.restarts += 1
-            failed_at = getattr(e, "step", step)
+            # honest failure accounting: trust the exception's own step
+            # when it carries one; otherwise the best known lower bound
+            # is the step this attempt RESUMED from, not the loop
+            # variable (which may alias a later partial advance)
+            failed_at = getattr(e, "step", None)
+            if failed_at is None:
+                failed_at = resumed_from
             report.failures.append((failed_at, repr(e)))
             if report.restarts > max_restarts:
                 raise RuntimeError(
@@ -106,7 +113,17 @@ def run_with_recovery(
                     if reestablish is not None:
                         reestablish(directory)
             resumed = restore()
-            report.replayed_steps += max(failed_at - resumed, 0)
+            if resumed > failed_at:
+                # a checkpoint from AFTER the failure step means restore
+                # did not rewind to a state-consistent point (stale or
+                # foreign checkpoint directory) — continuing would skip
+                # data; replaying from it would double-fold.  Refuse.
+                raise RuntimeError(
+                    f"restore() resumed at step {resumed}, past the "
+                    f"failure at step {failed_at} — the checkpoint does "
+                    f"not precede the failure, recovery cannot replay "
+                    f"exactly") from e
+            report.replayed_steps += failed_at - resumed
             step = resumed
     report.final_step = step
     return report

@@ -63,6 +63,13 @@ class BackupDispatcher:
         self.inflight[chunk_id] = w
         return w
 
+    def track(self, chunk_id: int, worker: int) -> int:
+        """Record an externally-chosen assignment (the window engine does
+        its own round-robin; the dispatcher still needs the mapping so
+        ``reissue`` picks a DIFFERENT worker for the backup copy)."""
+        self.inflight[chunk_id] = worker
+        return worker
+
     def reissue(self, chunk_id: int) -> Optional[int]:
         """Straggling chunk: send a backup copy to the next worker."""
         if chunk_id in self.completed:

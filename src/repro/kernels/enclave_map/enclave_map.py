@@ -81,7 +81,8 @@ OPS: Dict[str, Callable] = {
 }
 
 
-def _enclave_rows_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref, data_ref,
+def _enclave_rows_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref,
+                         nonce_out_ref, ctr_out_ref, data_ref,
                          out_ref, *, op: str, const: float):
     """Per-row (key, nonce, counter) variant: the window-batched executor.
 
@@ -90,12 +91,18 @@ def _enclave_rows_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref, data_ref,
     sharing its nonce, counters 1..n_blocks) is ONE grid sweep — the
     batched sibling of ``_enclave_kernel``, with the same VMEM-confined
     plaintext guarantee: decrypt, operator, re-encrypt never leave the
-    tile.
+    tile.  The outbound keystream has its own (nonce, counter) columns:
+    in steady state they equal the inbound ones, but a fault-tolerant
+    re-execution must re-seal under a FRESH counter block (the inbound
+    coordinates were already spent on ``kout`` by the first dispatch),
+    so the re-encrypt coordinates are independent inputs.
     """
     kin = [kin_ref[:, i] for i in range(8)]        # 8 x (rows,)
     kout = [kout_ref[:, i] for i in range(8)]
     nonce = [nonce_ref[:, i] for i in range(3)]    # 3 x (rows,)
     counters = ctr_ref[...]                        # (rows,)
+    nonce_out = [nonce_out_ref[:, i] for i in range(3)]
+    counters_out = ctr_out_ref[...]
 
     # ---- decrypt (plaintext exists only from here ...)
     ks_in = keystream_vectors(kin, nonce, counters)
@@ -103,7 +110,7 @@ def _enclave_rows_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref, data_ref,
     # ---- the enclaved operator
     y = OPS[op](pt, const)
     # ---- re-encrypt (... to here — never written to HBM)
-    ks_out = keystream_vectors(kout, nonce, counters)
+    ks_out = keystream_vectors(kout, nonce_out, counters_out)
     out_ref[...] = y ^ jnp.stack(ks_out, axis=-1)
 
 
@@ -113,16 +120,26 @@ def enclave_apply_rows(keys_in: jax.Array, keys_out: jax.Array,
                        nonces: jax.Array, counters: jax.Array,
                        data_rows: jax.Array, *, op: str = "identity",
                        const: float = 0.0, block_rows: int = 256,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool = True,
+                       nonces_out: jax.Array = None,
+                       counters_out: jax.Array = None) -> jax.Array:
     """Apply ``op`` to ciphertext rows with per-row cipher parameters.
 
     data_rows: (R, 16) u32 ciphertext; keys_in/keys_out: (R, 8) u32;
     nonces: (R, 3) u32; counters: (R,) u32.  R % block_rows == 0.  Row r
     is decrypted under (keys_in[r], nonces[r], counters[r]), transformed,
-    and re-encrypted under keys_out[r] at the same (nonce, counter).
+    and re-encrypted under keys_out[r] at the same (nonce, counter) —
+    unless ``nonces_out``/``counters_out`` are given, in which case the
+    re-encrypt uses those coordinates instead (the fault-tolerance
+    replay path: a retried row must never re-spend a (key, nonce,
+    counter) triple already used on the outbound key).
     """
     R = data_rows.shape[0]
     assert R % block_rows == 0, (R, block_rows)
+    if nonces_out is None:
+        nonces_out = nonces
+    if counters_out is None:
+        counters_out = counters
     grid = (R // block_rows,)
     return pl.pallas_call(
         functools.partial(_enclave_rows_kernel, op=op, const=const),
@@ -132,13 +149,16 @@ def enclave_apply_rows(keys_in: jax.Array, keys_out: jax.Array,
             pl.BlockSpec((block_rows, 8), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, 3), lambda i: (i, 0)),
             pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
             pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(data_rows.shape, U32),
         interpret=interpret,
     )(keys_in.astype(U32), keys_out.astype(U32), nonces.astype(U32),
-      counters.astype(U32), data_rows)
+      counters.astype(U32), nonces_out.astype(U32),
+      counters_out.astype(U32), data_rows)
 
 
 def _enclave_kernel(kin_ref, kout_ref, nonce_ref, ctr_ref, data_ref, out_ref,

@@ -20,11 +20,15 @@ def enclave_apply_ref(key_in, key_out, nonce, counter0, data_blocks, *,
 
 
 def enclave_apply_rows_ref(keys_in, keys_out, nonces, counters, data_rows, *,
-                           op="identity", const=0.0):
+                           op="identity", const=0.0,
+                           nonces_out=None, counters_out=None):
     """Row-batched oracle: per-row (key, nonce, counter) decrypt -> op ->
     re-encrypt, mirroring ``enclave_apply_rows`` (plaintext visible)."""
     ks_in = chacha20.chacha20_block_rows(keys_in, nonces, counters)
     pt = data_rows ^ ks_in
     y = OPS[op](pt, const)
-    ks_out = chacha20.chacha20_block_rows(keys_out, nonces, counters)
+    ks_out = chacha20.chacha20_block_rows(
+        keys_out,
+        nonces if nonces_out is None else nonces_out,
+        counters if counters_out is None else counters_out)
     return y ^ ks_out

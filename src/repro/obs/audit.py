@@ -36,6 +36,10 @@ KINDS = (
     "nonce_exhausted",  # a counter reservation would wrap the nonce space
     "slo_breach",       # a Watchdog SLO rule crossed its declared limit
     "stall",            # no window progressed for the rule's grace period
+    "worker_failed",    # a worker was lost mid-share (crash or stall)
+    "share_retried",    # a share was re-dispatched to the same worker
+    "share_failover",   # a share moved to a survivor / spare / backup
+    "window_replayed",  # retained ingress rows were re-executed
 )
 
 

@@ -149,6 +149,15 @@ def prometheus_text(registry=None, monitor=None) -> str:
         # registry totals (host_syncs, dispatches) whose flat names
         # already own the repro_pipeline_*/repro_device_* namespace.
         for key, v in sorted(snap["pipeline"].items()):
+            if isinstance(v, dict):
+                # nested group (e.g. "ft": fault-tolerance totals) —
+                # flatten to repro_monitor_<group>_<metric>
+                for sub, sv in sorted(v.items()):
+                    base = f"repro_monitor_{_sanitize(key)}_" \
+                           f"{_sanitize(sub)}"
+                    head(base, "gauge", f"Pipeline-wide {key}.{sub}")
+                    lines.append(f"{base} {_fmt(sv)}")
+                continue
             base = f"repro_monitor_{_sanitize(key)}"
             head(base, "gauge", f"Pipeline-wide {key}")
             lines.append(f"{base} {_fmt(v)}")

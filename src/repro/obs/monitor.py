@@ -277,12 +277,24 @@ class PipelineMonitor:
                      for kind, q in sorted(self._audit_times.items()) if q}
             host_syncs = REGISTRY.get("pipeline.host_syncs")
             dispatches = REGISTRY.get("device.dispatches")
+            # fault-tolerance totals (repro.ft): all zero / absent until
+            # a retry policy or chaos plan is attached to a run
+            ft = {}
+            for short in ("retries", "failovers", "backups", "replays",
+                          "worker_failures", "enroll_failures"):
+                c = REGISTRY.get(f"ft.{short}")
+                if c is not None:
+                    ft[short] = c.value
+            g = REGISTRY.get("ft.replay.retained_rows")
+            if g is not None:
+                ft["replay_retained_rows"] = g.value
             pipe = {
                 "uptime_s": now - self._t0,
                 "windows_total": self.windows_total,
                 "last_progress_age_s": now - self.last_progress,
                 "host_syncs": host_syncs.value if host_syncs else 0,
                 "dispatches": dispatches.value if dispatches else 0,
+                **({"ft": ft} if ft else {}),
                 **rates,
             }
         wd = None

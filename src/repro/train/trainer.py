@@ -68,6 +68,16 @@ class Trainer:
         self.params = model_api.init_params(run.model, jax.random.key(run.seed))
         self.opt_state = self.opt.init(self.params)
         self.step = 0
+        # Step-0 snapshot: restore() must rewind to a state-consistent
+        # point even when NO checkpoint exists yet (a failure before the
+        # first save).  Without this, a restart would replay steps on top
+        # of the failed attempt's partially-advanced params/opt_state —
+        # double-folding the optimizer trajectory.
+        # (real copies: the jitted step donates params/opt_state buffers,
+        # so aliasing the live tree would snapshot invalidated memory)
+        _copy = lambda x: jnp.array(x) if isinstance(x, jax.Array) else x  # noqa: E731
+        self._init_params = jax.tree_util.tree_map(_copy, self.params)
+        self._init_opt_state = jax.tree_util.tree_map(_copy, self.opt_state)
 
     # ------------------------------------------------------------ data path
 
@@ -96,6 +106,14 @@ class Trainer:
     def restore(self) -> int:
         last = ckpt.latest_step(self.tcfg.ckpt_dir)
         if last is None:
+            # no checkpoint yet: rewind to the step-0 snapshot — the
+            # failed attempt's partial progress must not leak into the
+            # replay (recovered output == uninterrupted output, exactly)
+            _copy = lambda x: jnp.array(x) if isinstance(x, jax.Array) \
+                else x  # noqa: E731
+            self.params = jax.tree_util.tree_map(_copy, self._init_params)
+            self.opt_state = jax.tree_util.tree_map(
+                _copy, self._init_opt_state)
             self.step = 0
             return 0
         step, params, opt_state = ckpt.restore(

@@ -256,3 +256,135 @@ def test_trainer_end_to_end_with_failure(tmp_path):
     assert out["replayed_steps"] > 0
     losses = [h["loss"] for h in out["history"]]
     assert losses[-1] < losses[0]  # learning happened across the failure
+
+
+def test_recovery_before_first_checkpoint_replays_exactly(tmp_path):
+    """Regression: a failure BEFORE the first checkpoint must replay from
+    step 0 with the partial fold discarded — the old supervisor resumed
+    the stale in-memory accumulator and double-folded the replayed
+    chunks.  Recovered output must equal the uninterrupted run bit-for-
+    bit, under active rekeying."""
+    from repro.attest.directory import KeyDirectory
+    from repro.attest.measure import IO_ENDPOINT
+    from repro.core.secure_channel import SecureChannel
+
+    TOTAL, CKPT_EVERY, REKEY_AT, FAIL_AT = 8, 5, 2, 3
+    like = {"acc": jnp.zeros((8,), jnp.float32)}
+
+    def data(step):
+        return jnp.full((8,), float(step + 1), jnp.float32)
+
+    def run(path, injector):
+        d = KeyDirectory(seed=9)
+        d.enroll("io/src", IO_ENDPOINT, allow=True)
+        d.enroll("io/snk", IO_ENDPOINT, allow=True)
+        d.establish("stream", "io/src", "io/snk")
+        ch = SecureChannel(d.handle("stream"))
+        state = {"acc": np.zeros((8,), np.float32), "step": 0}
+
+        def run_steps(start, end):
+            for s in range(start, end):
+                if injector is not None:
+                    injector.maybe_fail(s)
+                if s == REKEY_AT:
+                    d.advance_epoch()
+                hdr, ct, tag, meta = ch.protect(data(s))
+                x, ok = ch.unprotect(hdr, ct, tag, meta)
+                assert bool(ok)
+                state["acc"] = state["acc"] + np.asarray(x)
+                state["step"] = s + 1
+                if state["step"] % CKPT_EVERY == 0:
+                    ckpt.save(path, state["step"],
+                              {"acc": state["acc"]}, {}, sealed=True,
+                              seed=9)
+            return state["step"]
+
+        def restore():
+            last = ckpt.latest_step(path)
+            if last is None:
+                # no checkpoint: the replay starts from a CLEAN fold —
+                # keeping the partial acc is exactly the fixed bug
+                state["acc"] = np.zeros((8,), np.float32)
+                state["step"] = 0
+                return 0
+            step, p, _ = ckpt.restore(path, last, seed=9,
+                                      params_like=like, opt_like={})
+            state["acc"], state["step"] = np.asarray(p["acc"]), step
+            return step
+
+        rep = run_with_recovery(total_steps=TOTAL, run_steps=run_steps,
+                                restore=restore)
+        return state["acc"], rep
+
+    acc_ref, rep_ref = run(str(tmp_path / "ref"), None)
+    assert rep_ref.restarts == 0
+    inj = FailureInjector(schedule={FAIL_AT: "node_loss"})
+    acc, rep = run(str(tmp_path / "ck"), inj)
+    assert rep.restarts == 1
+    # exact accounting: steps 0..FAIL_AT-1 were folded then discarded
+    assert rep.replayed_steps == FAIL_AT
+    assert rep.failures[0][0] == FAIL_AT
+    assert np.array_equal(acc, acc_ref)
+
+
+def test_recovery_rejects_restore_past_the_failure():
+    """A restore() that lands AFTER the failure step cannot replay
+    exactly (it would skip data or double-fold) — the supervisor must
+    refuse instead of silently continuing."""
+    inj = FailureInjector(schedule={3: "node_loss"})
+
+    def run_steps(start, end):
+        for s in range(start, end):
+            inj.maybe_fail(s)
+        return end
+
+    calls = {"n": 0}
+
+    def restore():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            return 0        # cold start
+        return 6            # stale/foreign checkpoint beyond the failure
+
+    with pytest.raises(RuntimeError, match="past the failure"):
+        run_with_recovery(total_steps=10, run_steps=run_steps,
+                          restore=restore)
+
+
+def test_trainer_failure_before_first_ckpt_matches_uninterrupted(tmp_path):
+    """Trainer end-to-end regression for the same bug: a failure at step
+    3 with ckpt_every=8 (no checkpoint on disk yet) must rewind params
+    AND optimizer state to the step-0 snapshot; the recovered run's
+    final loss equals the uninterrupted run's exactly (same data_fn,
+    same init, full replay)."""
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    ctx = local_mesh_context()
+    cfg = reduce_for_smoke(get_model_config("llama3.2-1b"))
+    run = RunConfig(model=cfg,
+                    shape=ShapeConfig("tiny", 16, 4, "train"),
+                    optimizer=OptimizerConfig(lr=5e-3, warmup_steps=5),
+                    remat="none")
+
+    def data_fn(step):
+        rng = np.random.default_rng(step)
+        start = rng.integers(0, cfg.vocab_size, (4, 1))
+        ramp = (start + np.arange(17)[None]) % cfg.vocab_size
+        toks = ramp.astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def final_loss(ckdir, injector):
+        tcfg = TrainerConfig(total_steps=10, ckpt_every=8, log_every=2,
+                             ckpt_dir=ckdir, sealed_ckpt=True)
+        tr = Trainer(run, ctx, data_fn, tcfg, injector=injector)
+        out = tr.train()
+        return out, out["history"][-1]["loss"]
+
+    ref_out, ref_loss = final_loss(str(tmp_path / "ref"), None)
+    assert ref_out["restarts"] == 0
+    inj = FailureInjector(schedule={3: "node_loss"})
+    out, loss = final_loss(str(tmp_path / "ck"), inj)
+    assert out["restarts"] == 1
+    assert out["replayed_steps"] == 3      # exact: replay 0,1,2
+    assert out["final_step"] == 10
+    assert loss == ref_loss                # bit-equal full replay

@@ -66,9 +66,9 @@ def test_doc_python_blocks_execute(path):
 
 
 def test_docs_exist_and_are_linked_from_readme():
-    """The five guides exist and README links to each of them."""
+    """The six guides exist and README links to each of them."""
     readme = (ROOT / "README.md").read_text()
     for guide in ("architecture", "security-model", "dsl", "benchmarks",
-                  "observability"):
+                  "observability", "fault-tolerance"):
         assert (ROOT / "docs" / f"{guide}.md").is_file(), f"missing {guide}"
         assert f"docs/{guide}.md" in readme, f"README must link {guide}"
